@@ -1,0 +1,30 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import statistics
+import sys
+import time
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timed(fn, *args, repeat: int = 3, **kwargs):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def mean(xs):
+    return statistics.mean(xs)

@@ -1,0 +1,51 @@
+"""Paper Fig. 10 — M4BRAM vs BRAMAC at uniform 2/4/8-bit precision.
+
+Paper claims: speedup over DLA — M4BRAM-S 2.16×, M4BRAM-L 2.13×,
+BRAMAC-1DA 1.35×, BRAMAC-2SA 1.67× (averages over AlexNet/VGG-16/
+ResNet-18/ResNet-34/ViT-attn × {2,4,8}-bit); M4BRAM / BRAMAC = 1.43×.
+8-bit VGG/ResNets use GX650 (DLA buffer model), everything else GX400.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, mean, timed
+
+NETS = ("alexnet", "vgg16", "resnet18", "resnet34", "vit-attn")
+CONFIGS = ("DP-M4S", "SY-M4L", "BRAMAC-1DA", "BRAMAC-2SA")
+
+
+def _fpga_for(net: str, p: int):
+    from repro.core import simulate as sim
+
+    return sim.GX650 if (p == 8 and net in ("vgg16", "resnet18", "resnet34")) \
+        else sim.GX400
+
+
+def run() -> dict:
+    from repro.core import dse, simulate as sim
+    from repro.core.workloads import NETWORKS
+
+    results = {}
+    for cfg_name in CONFIGS:
+        cim = sim.CIM_ARCHS[cfg_name]
+        vals = []
+        for net in NETS:
+            for p in (2, 4, 8):
+                s, us = timed(
+                    lambda: dse.speedup(NETWORKS[net], p, p, _fpga_for(net, p), cim),
+                    repeat=1,
+                )
+                vals.append(s)
+                emit(f"fig10/{cfg_name}/{net}/w{p}a{p}", us, f"speedup={s:.2f}x")
+        results[cfg_name] = mean(vals)
+        emit(f"fig10/{cfg_name}/avg", 0.0, f"speedup={results[cfg_name]:.2f}x")
+
+    m4 = mean([results["DP-M4S"], results["SY-M4L"]])
+    br = mean([results["BRAMAC-1DA"], results["BRAMAC-2SA"]])
+    results["m4_over_bramac"] = m4 / br
+    emit("fig10/m4_over_bramac", 0.0,
+         f"ratio={m4/br:.2f}x paper=1.43x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig. 11 — ablation: DP-M4S vs BRAMAC-1DA as the supported
+(N_W, N_I) set grows. Paper: N_I=1 only → 1.06×; {1,2} → intermediate;
+{1,2,4} → 1.64× (VGG-16 / ResNet-18 / ResNet-34).
+
+Known fidelity gap (documented in EXPERIMENTS.md §Simulator-fidelity): our
+filter-residency model replicates filter sets across spare CIM blocks,
+which *is* a form of cross-block weight-sharing — it absorbs most of the
+benefit the paper attributes to in-block duplication, so our ablation
+spread is flatter than the paper's. The direction (more N_I options never
+hurts; M4BRAM ≥ BRAMAC) is preserved.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, mean, timed
+
+NETS = ("vgg16", "resnet18", "resnet34")
+
+
+def run() -> dict:
+    from repro.core import dse, simulate as sim
+    from repro.core.workloads import NETWORKS
+
+    results = {}
+    for restrict, label in [((1,), "ni1"), ((1, 2), "ni12"), ((1, 2, 4), "ni124")]:
+        vals = []
+        for net in NETS:
+            def one():
+                b = dse.search(NETWORKS[net], 4, 4, sim.GX400,
+                               sim.CIM_ARCHS["BRAMAC-1DA"])
+                m = dse.search(NETWORKS[net], 4, 4, sim.GX400,
+                               sim.CIM_ARCHS["DP-M4S"], ni_restrict=restrict)
+                return b.cycles / m.cycles
+
+            s, us = timed(one, repeat=1)
+            vals.append(s)
+            emit(f"fig11/{label}/{net}", us, f"speedup_vs_bramac={s:.2f}x")
+        results[label] = mean(vals)
+        emit(f"fig11/{label}/avg", 0.0, f"speedup={results[label]:.2f}x")
+    emit("fig11/paper_anchors", 0.0, "ni1=1.06x ni124=1.64x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Fig. 12 — iso-area M4BRAM vs DSP: GX-M4 (2489 M4BRAM-L, no DSP)
+vs GX-DSP (2489 plain BRAM + 640 DSP), weight 8-bit, activations 4–8b,
+AlexNet/ResNet-18/ResNet-34. Paper: 1.98× (sync) / 2.95× (double-pumped).
+
+This is the figure the simulator's single free constant
+(_BPE_EFFICIENCY) is calibrated against — see core/simulate.py.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, mean, timed
+
+NETS = ("alexnet", "resnet18", "resnet34")
+
+
+def run() -> dict:
+    from repro.core import dse, simulate as sim
+    from repro.core.workloads import NETWORKS
+
+    gx_m4 = sim.Fpga("GX-M4", 0, 2489)
+    gx_dsp = sim.Fpga("GX-DSP", 640, 2489)
+    results = {}
+    for cfg_name, paper in (("SY-M4L", 1.98), ("DP-M4L", 2.95)):
+        cim = sim.CIM_ARCHS[cfg_name]
+        vals = []
+        for net in NETS:
+            for a in (4, 5, 6, 7, 8):
+                def one():
+                    base = dse.search(NETWORKS[net], 8, a, gx_dsp, None)
+                    m4 = dse.search(NETWORKS[net], 8, a, gx_m4, cim)
+                    return base.cycles / m4.cycles
+
+                s, us = timed(one, repeat=1)
+                vals.append(s)
+                emit(f"fig12/{cfg_name}/{net}/a{a}", us, f"speedup={s:.2f}x")
+        results[cfg_name] = mean(vals)
+        emit(f"fig12/{cfg_name}/avg", 0.0,
+             f"speedup={results[cfg_name]:.2f}x paper={paper}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

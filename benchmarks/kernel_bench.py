@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks (interpret-mode wall time is NOT a TPU number —
+these rows exist to track relative cost of the bit-plane path vs the dense
+reference on CPU and to exercise the jit'd wrappers end-to-end)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+
+
+def run() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.quant import QuantConfig
+    from repro.core.quantized_linear import pack_weight, qmatmul
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    results = {}
+    for (m, k, n, ab) in [(128, 512, 256, 8), (128, 512, 256, 4), (256, 1024, 512, 2)]:
+        x = jnp.asarray(rng.integers(-(1 << (ab - 1)), 1 << (ab - 1), (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+        out, us = timed(
+            lambda: jax.block_until_ready(
+                ops.bitplane_matmul(x, w, a_bits=ab)
+            ),
+            repeat=3,
+        )
+        emit(f"kernel/bitplane_matmul/{m}x{k}x{n}_a{ab}", us,
+             f"planes={-(-ab//2)}")
+        results[f"bitplane_a{ab}"] = us
+
+    xf = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
+    _, us = timed(lambda: jax.block_until_ready(ops.quantize_rows(xf, bits=6)[0]),
+                  repeat=3)
+    emit("kernel/quantize_rows/256x1024_b6", us, "fused absmax+round")
+
+    wf = jnp.asarray(rng.normal(size=(1024, 512)), jnp.float32)
+    cfg = QuantConfig(w_bits=4, a_bits=8)
+    pw = pack_weight(wf, cfg)
+    _, us = timed(
+        lambda: jax.block_until_ready(qmatmul(xf, pw, cfg, use_kernel=False)),
+        repeat=3,
+    )
+    emit("kernel/qmatmul_serve_w4a8/256x1024x512", us,
+         f"packed_bytes={pw.hbm_bytes()} dense_bytes={wf.size*4}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

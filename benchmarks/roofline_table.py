@@ -1,0 +1,50 @@
+"""§Roofline table: reads the dry-run sweep JSONL and prints the
+per-(arch × shape) roofline terms for the single-pod mesh."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.jsonl"
+
+
+def load(mesh: str = "single"):
+    rows = {}
+    if not RESULTS.exists():
+        return rows
+    for line in RESULTS.read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("mesh") == mesh and r.get("quant", "none") == "none":
+            rows[(r["arch"], r["shape"])] = r  # later lines win (resumable)
+    return rows
+
+
+def run() -> dict:
+    rows = load("single")
+    ok = 0
+    for (arch, shape), r in sorted(rows.items()):
+        if r.get("status") == "skipped":
+            emit(f"roofline/{arch}/{shape}", 0.0, f"SKIP({r.get('reason','')[:40]})")
+            continue
+        if r.get("status") != "ok":
+            emit(f"roofline/{arch}/{shape}", 0.0, f"status={r.get('status')}")
+            continue
+        ok += 1
+        emit(
+            f"roofline/{arch}/{shape}",
+            r.get("compile_s", 0.0) * 1e6,
+            f"compute={r['compute_s']*1e3:.1f}ms memory={r['memory_s']*1e3:.1f}ms "
+            f"collective={r['collective_s']*1e3:.1f}ms bound={r['bottleneck']} "
+            f"useful={r['useful_flops_ratio']:.2f}",
+        )
+    emit("roofline/cells_ok", 0.0, f"count={ok}")
+    return {"cells_ok": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Accuracy-vs-performance sweep (the paper's Fig. 9 trade-off, end to
+end on our stack):
+
+  * trains a small LM briefly (FP32 reference),
+  * evaluates held-out loss under post-training quantization at every
+    (w_bits, a_bits) the paper supports (w ∈ {2,4,8}, a ∈ 2..8),
+  * reports each point's simulated Hetero-DLA speedup next to the loss
+    delta — reproducing the shape of the paper's trade-off curve on a
+    task we can actually train in this container.
+
+Run:  PYTHONPATH=src python examples/mixed_precision_sweep.py [--steps 120]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    from repro.configs import get_reduced_config
+    from repro.configs.base import TrainConfig
+    from repro.core import dse, simulate as sim
+    from repro.core.quant import QuantConfig
+    from repro.core.workloads import NETWORKS
+    from repro.data import DataIterator
+    from repro.models import build_model
+    from repro.train.loop import run_training
+
+    cfg = dataclasses.replace(
+        get_reduced_config("olmo-1b"), num_layers=4, d_model=256, d_ff=1024,
+        n_heads=4, n_kv_heads=4, vocab=2048, dtype="float32",
+    )
+    model = build_model(cfg)
+    tc = TrainConfig(lr=5e-3, warmup_steps=10, total_steps=args.steps,
+                     log_every=20, checkpoint_every=10**9)
+    data = DataIterator(cfg, global_batch=8, seq_len=128, seed=0, branch=8)
+    print(f"training FP32 reference for {args.steps} steps ...")
+    state, hist = run_training(model, tc, data)
+    print(f"  loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    eval_batch = jax.tree_util.tree_map(jnp.asarray, data.batch_at(10_000))
+    base_loss = float(model.train_loss(state.params, eval_batch)[0])
+    print(f"held-out FP32 loss: {base_loss:.4f}\n")
+    print(f"{'config':8s} {'loss':>8s} {'delta':>8s} {'sim speedup':>12s}")
+
+    for w_bits in (8, 4, 2):
+        for a_bits in (8, 6, 4, 2):
+            qcfg = QuantConfig(w_bits=w_bits, a_bits=a_bits)
+            qmodel = build_model(cfg.with_quant(qcfg))
+            loss = float(qmodel.train_loss(state.params, eval_batch)[0])
+            sp = dse.speedup(NETWORKS["resnet18"], w_bits, a_bits,
+                             sim.GX650, sim.CIM_ARCHS["SY-M4L"],
+                             baseline_pw=8, baseline_pa=8)
+            print(f"w{w_bits}a{a_bits:<5d} {loss:8.4f} {loss-base_loss:+8.4f} "
+                  f"{sp:11.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end training driver: a ~100M-parameter olmo-family LM trained for
+a few hundred steps on the synthetic Markov corpus, with checkpointing,
+straggler monitoring, and optional int8 gradient compression and QAT.
+
+Run (CPU, ~10-20 min for the default 300 steps):
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--qat w4a6]
+      [--compress] [--ckpt /tmp/ckpt]
+
+Loss should fall well below the unigram entropy floor (~ln vocab) as the
+model learns the Markov structure; the script prints the trajectory and
+final evaluation.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import jax
+
+
+def build_100m():
+    from repro.configs.base import ModelConfig
+
+    # ~100M params: 12L × d768 × ff3072, vocab 8192 (olmo-style recipe).
+    return ModelConfig(
+        name="olmo-100m", family="dense", num_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, d_ff=3072, vocab=8192,
+        ffn="swiglu", norm="nonparam_ln", tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--qat", default=None, help="e.g. w4a6")
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 gradient compression with error feedback")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--small", action="store_true",
+                    help="8M-param model for quick runs")
+    args = ap.parse_args()
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs.base import TrainConfig
+    from repro.data import DataIterator
+    from repro.models import build_model
+    from repro.train.loop import run_training
+
+    cfg = build_100m()
+    if args.small:
+        cfg = dataclasses.replace(cfg, num_layers=4, d_model=256, d_ff=1024,
+                                  n_heads=4, n_kv_heads=4, vocab=2048)
+    if args.qat:
+        from repro.launch.dryrun import _parse_quant
+
+        cfg = cfg.with_quant(_parse_quant(args.qat))
+    model = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params, "
+          f"qat={args.qat or 'off'})")
+
+    tc = TrainConfig(
+        lr=args.lr, warmup_steps=20, total_steps=args.steps,
+        grad_clip=1.0, log_every=10, checkpoint_every=100,
+        grad_compress_bits=8 if args.compress else 0,
+    )
+    data = DataIterator(cfg, global_batch=args.batch, seq_len=args.seq,
+                        seed=0, branch=8)
+    mgr = CheckpointManager(args.ckpt, keep=2) if args.ckpt else None
+
+    def hook(step, rec):
+        print(f"step {rec['step']:4d}  loss {rec['loss']:.4f}  "
+              f"lr {rec['lr']:.2e}  gnorm {rec['grad_norm']:.2f}  "
+              f"{rec['dt']*1e3:.0f} ms" + ("  [STRAGGLER]" if rec["straggler"] else ""))
+
+    state, history = run_training(model, tc, data, checkpoint_mgr=mgr,
+                                  hooks=hook)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"(unigram floor ~= ln({cfg.vocab}) = "
+          f"{__import__('math').log(cfg.vocab):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""repro — M4BRAM (mixed-precision matmul in FPGA BRAMs) reproduced and
+adapted as a production JAX/TPU training + serving framework.
+
+Subpackages:
+  core      — the paper's technique (quantization, bit-serial MAC2, block
+              model, hetero partitioner, cycle-accurate simulator, DSE)
+  kernels   — Pallas TPU kernels (bit-plane matmul, pack/quant, wkv6, ...)
+  models    — 10-arch model zoo (dense GQA, MoE, RWKV6, griffin, encoder, VLM)
+  parallel  — sharding rules (DP/TP/FSDP/EP/SP) + compressed collectives
+  data      — deterministic, checkpointable synthetic LM pipeline
+  optim     — AdamW + schedules (from scratch)
+  checkpoint— atomic, elastic checkpoint manager
+  train     — fault-tolerant training loop
+  serving   — batched prefill/decode engine
+  configs   — assigned architecture configs + shape sets
+  launch    — production mesh, multi-pod dry-run, train/serve drivers
+  roofline  — TPU v5e roofline term extraction from compiled artifacts
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,171 @@
+"""Atomic, elastic checkpoint manager.
+
+Fault-tolerance contract:
+  * saves are atomic (write to `<step>.tmp/`, fsync, rename to `<step>/`)
+    so a preemption mid-save never corrupts the latest checkpoint;
+  * keep-K retention with the newest always preserved;
+  * restore picks the newest *complete* checkpoint (a COMMIT marker file
+    written last);
+  * topology-agnostic: leaves are stored as host numpy arrays keyed by
+    tree path, so a restart may load onto a different mesh / device count
+    (elastic scaling) — the caller re-shards with jax.device_put against
+    its own shardings;
+  * optional async mode: the device→host transfer happens synchronously
+    (cheap) and the disk write runs on a background thread so training is
+    not stalled on I/O.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+
+_COMMIT = "COMMITTED"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.isdigit() and (p / _COMMIT).exists():
+                steps.append(int(p.name))
+        return max(steps) if steps else None
+
+    def save(self, step: int, state: Any, data_state: Optional[dict] = None) -> None:
+        # Device→host synchronously (so donated buffers are safe to reuse).
+        # Non-native numpy dtypes (bf16) are widened to fp32 on disk — the
+        # manifest keeps the logical dtype and restore casts back.
+        import jax.numpy as jnp
+
+        def to_host(l):
+            arr = np.asarray(l)
+            if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+                arr = np.asarray(jnp.asarray(l, jnp.float32))
+            return arr
+
+        leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(state)
+        host = [(_path_str(p), to_host(l)) for p, l in leaves_with_paths]
+
+        def write():
+            tmp = self.dir / f"{step}.tmp"
+            final = self.dir / str(step)
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {"step": step, "leaves": []}
+            arrays = {}
+            for i, (path, arr) in enumerate(host):
+                key = f"leaf_{i}"
+                arrays[key] = arr
+                manifest["leaves"].append(
+                    {"key": key, "path": path, "dtype": str(arr.dtype),
+                     "shape": list(arr.shape)}
+                )
+            np.savez(tmp / "arrays.npz", **arrays)
+            if data_state is not None:
+                (tmp / "data_state.json").write_text(json.dumps(data_state))
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            with open(tmp / _COMMIT, "w") as f:
+                f.write("ok")
+                f.flush()
+                os.fsync(f.fileno())
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self._gc()
+
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(p.name) for p in self.dir.iterdir()
+            if p.is_dir() and p.name.isdigit() and (p / _COMMIT).exists()
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / str(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def restore(
+        self,
+        init_fn: Callable[[], Any],
+        shardings: Any = None,
+        step: Optional[int] = None,
+    ) -> Tuple[Any, Optional[dict], int]:
+        """Returns (state, data_state, step). The template from init_fn
+        defines the tree structure; leaves are loaded by tree path so the
+        restore survives refactors that only reorder the tree. If
+        `shardings` is given, leaves are device_put with them (elastic
+        re-layout onto the current mesh)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        d = self.dir / str(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        arrays = np.load(d / "arrays.npz")
+        by_path = {
+            leaf["path"]: arrays[leaf["key"]] for leaf in manifest["leaves"]
+        }
+        template = jax.eval_shape(init_fn)
+        leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        shard_leaves = (
+            treedef.flatten_up_to(shardings) if shardings is not None else None
+        )
+        out = []
+        for i, (p, tmpl) in enumerate(leaves_with_paths):
+            key = _path_str(p)
+            if key not in by_path:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = by_path[key]
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs {tmpl.shape}"
+                )
+            jarr = jax.numpy.asarray(arr).astype(tmpl.dtype)
+            if shard_leaves is not None:
+                out.append(jax.device_put(jarr, shard_leaves[i]))
+            else:
+                out.append(jax.device_put(jarr))
+        state = treedef.unflatten(out)
+        data_state = None
+        ds = d / "data_state.json"
+        if ds.exists():
+            data_state = json.loads(ds.read_text())
+        return state, data_state, step

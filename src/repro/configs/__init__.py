@@ -1,0 +1,38 @@
+"""Architecture config registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import MeshConfig, ModelConfig, TrainConfig  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable  # noqa: F401
+
+# Assigned architecture ids (public pool) → module names.
+_ARCH_MODULES: Dict[str, str] = {
+    "nemotron-4-15b": "nemotron_4_15b",
+    "olmo-1b": "olmo_1b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "stablelm-12b": "stablelm_12b",
+    "paligemma-3b": "paligemma_3b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "hubert-xlarge": "hubert_xlarge",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.reduced()

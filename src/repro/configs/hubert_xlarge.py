@@ -1,0 +1,43 @@
+"""hubert-xlarge — encoder-only audio transformer (wav2vec2-style backbone).
+
+[arXiv:2106.07447] 48L, d_model 1280, 16 heads (MHA), d_ff 5120,
+vocab 504 (cluster-target classification head). The CNN feature extractor
+is a STUB per the assignment: input_specs() provides precomputed frame
+embeddings (B, T, d_model). Encoder-only → no decode step (decode shapes
+skipped, DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="encoder",
+    num_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    ffn="gelu",
+    norm="layernorm",
+    causal=False,
+    frontend="frame_stub",
+    frontend_dim=512,  # w2v2/HuBERT conv feature-extractor width
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-smoke",
+        family="encoder",
+        num_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=32,
+        ffn="gelu",
+        norm="layernorm",
+        causal=False,
+        frontend="frame_stub",
+        frontend_dim=16,
+    )

@@ -1,0 +1,45 @@
+"""llama4-maverick-400b-a17b — MoE decoder, 128 experts top-1.
+
+[hf:meta-llama/Llama-4-*] 48L, d_model 5120, 40 Q heads, 8 KV heads,
+d_ff 8192 per expert, vocab 202048, 128 experts, top-1 routing, qk-norm.
+Early fusion is a frontend property — text backbone only here (assignment:
+modality frontends are stubs). Experts are EP-sharded (128 % 16 == 0).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202048,
+    ffn="swiglu",
+    norm="rmsnorm",
+    qk_norm=True,
+    rope_theta=500000.0,
+    moe_experts=128,
+    moe_top_k=1,
+    moe_shard="expert",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=512,
+        ffn="swiglu",
+        norm="rmsnorm",
+        qk_norm=True,
+        moe_experts=8,
+        moe_top_k=1,
+        moe_shard="expert",
+    )

@@ -1,0 +1,46 @@
+"""recurrentgemma-9b — Griffin hybrid: RG-LRU recurrence + local attention.
+
+[arXiv:2402.19427] 38L, d_model 4096, 16 heads (kv=1, MQA), d_ff 12288
+(GeGLU), vocab 256000. Block pattern 1 attention per 2 recurrent blocks
+(("rglru","rglru","attn") repeated; 38 layers → 26 recurrent + 12 local-
+attention blocks). Local window 2048. Sub-quadratic → runs long_500k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    ffn="geglu",
+    norm="rmsnorm",
+    block_pattern=("rglru", "rglru", "attn"),
+    rnn_width=4096,
+    conv_width=4,
+    local_window=2048,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke",
+        family="hybrid",
+        num_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        d_ff=128,
+        vocab=512,
+        head_dim=16,
+        ffn="geglu",
+        norm="rmsnorm",
+        block_pattern=("rglru", "rglru", "attn"),
+        rnn_width=64,
+        conv_width=4,
+        local_window=16,
+    )

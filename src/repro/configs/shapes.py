@@ -1,0 +1,63 @@
+"""Assigned input-shape sets and the (arch × shape) applicability matrix.
+
+LM transformer shapes are seq_len × global_batch:
+  train_4k     : seq 4096,    batch 256 — training (lowers train_step)
+  prefill_32k  : seq 32768,   batch 32  — inference prefill (prefill_step)
+  decode_32k   : seq 32768,   batch 128 — decode: ONE new token, cache=seq
+  long_500k    : seq 524288,  batch 1   — long-context decode
+
+Skips (per assignment instructions, documented in DESIGN.md §6):
+  * long_500k needs sub-quadratic attention → only ssm/hybrid/SWA archs.
+  * encoder-only archs have no decode step → decode shapes skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Archs with sub-quadratic sequence mixing (may run long_500k).
+SUBQUADRATIC = {
+    "mixtral-8x22b",        # sliding-window attention
+    "recurrentgemma-9b",    # RG-LRU + local attention
+    "rwkv6-3b",             # attention-free
+}
+
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def applicable(arch: str, shape: str) -> Tuple[bool, Optional[str]]:
+    """Returns (runnable, skip_reason)."""
+    spec = SHAPES[shape]
+    if arch in ENCODER_ONLY and spec.kind == "decode":
+        return False, "encoder-only arch: no autoregressive decode step"
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "pure full-attention arch: 500k context needs sub-quadratic attention"
+    return True, None
+
+
+def all_cells():
+    """Every (arch, shape) cell with its applicability — 40 total."""
+    from repro.configs import ARCH_IDS
+
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            ok, reason = applicable(arch, shape)
+            cells.append((arch, shape, ok, reason))
+    return cells

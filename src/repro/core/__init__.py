@@ -1,0 +1,20 @@
+"""repro.core — M4BRAM's contribution as composable JAX modules.
+
+Layers:
+  quant            : uniform symmetric quantization + MAE-optimal clipping
+  bitplane         : bit-plane decomposition, sub-byte packing
+  bitserial        : cycle-exact MAC2 / bit-serial dot semantics (the oracle)
+  m4bram           : functional block model (modes, shuffler, instructions)
+  quantized_linear : the technique as a drop-in matmul for the model zoo
+  hetero           : BPE/DSP workload partitioning (Q_VEC split)
+  simulate         : cycle-accurate DLA / Hetero-DLA / BRAMAC simulator
+  dse              : tiling design-space exploration (perf × perf/area)
+  workloads        : the paper's DNN benchmark layer tables
+"""
+from repro.core.quant import QuantConfig, fake_quant, quantize_tensor  # noqa: F401
+from repro.core.quantized_linear import (  # noqa: F401
+    PackedWeight,
+    pack_weight,
+    qmatmul,
+    quantize_params_for_serving,
+)

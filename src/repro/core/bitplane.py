@@ -1,0 +1,159 @@
+"""Bit-plane decomposition and sub-byte weight packing.
+
+This is the data-layout half of the M4BRAM adaptation:
+
+* The BPE consumes **two activation bits per cycle** ({I2[n], I1[n]}, §IV-F).
+  `to_bitplanes(x, bits, plane_bits=2)` produces exactly those 2-bit planes;
+  the bit-plane matmul kernel then reconstructs
+      x = sum_p plane_p << (2p)   (with a sign correction for signed x)
+  which mirrors the BPE's shift-accumulate over cycles.
+
+* The 32-bit weight vector read from the main BRAM array holds 4×8b / 8×4b /
+  16×2b weight elements (§IV-B, Fig. 7b). `pack_int{2,4}` reproduces that
+  layout: little-endian within the storage word, sign-extended on unpack —
+  matching the BPE's sign-extended weight rows.
+
+Signed handling: for an n-bit two's-complement value the top plane carries
+the sign. We decompose the *offset* representation instead: for signed x in
+[-2^(n-1), 2^(n-1)-1], x + 2^(n-1) is unsigned in [0, 2^n - 1]; the kernel
+subtracts (2^(n-1) · sum(W)) once per output — the same trick as the INV-row
+temporary in the paper's BPE, which stores an inverted partial sum to handle
+the sign bit without a separate signed datapath.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def num_planes(bits: int, plane_bits: int = 2) -> int:
+    return (bits + plane_bits - 1) // plane_bits
+
+
+def to_bitplanes(
+    q: jax.Array, bits: int, plane_bits: int = 2, signed: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """Decompose integer codes into unsigned bit-planes.
+
+    Args:
+      q: int32 codes in the `bits`-bit range (signed two's complement range
+        if signed).
+      bits: code precision (2..8).
+      plane_bits: bits consumed per "cycle" (2 for M4BRAM's dual-bit BPE).
+      signed: if True, uses the offset-binary trick: planes decompose
+        (q + 2^(bits-1)) and the caller must subtract the offset
+        2^(bits-1) * sum(other operand) from the final accumulation.
+
+    Returns:
+      planes: (P, *q.shape) uint8 array, planes[p] in [0, 2^plane_bits).
+              plane p has weight 2^(p*plane_bits); planes are little-endian.
+      offset: scalar int32 offset that was added (0 if unsigned).
+    """
+    p = num_planes(bits, plane_bits)
+    offset = jnp.int32(1 << (bits - 1)) if signed else jnp.int32(0)
+    u = (q + offset).astype(jnp.uint32)
+    mask = jnp.uint32((1 << plane_bits) - 1)
+    planes = jnp.stack(
+        [((u >> jnp.uint32(i * plane_bits)) & mask).astype(jnp.uint8) for i in range(p)],
+        axis=0,
+    )
+    return planes, offset
+
+
+def from_bitplanes(
+    planes: jax.Array, offset: jax.Array, plane_bits: int = 2
+) -> jax.Array:
+    """Inverse of to_bitplanes (for testing)."""
+    p = planes.shape[0]
+    acc = jnp.zeros(planes.shape[1:], jnp.int32)
+    for i in range(p):
+        acc = acc + (planes[i].astype(jnp.int32) << (i * plane_bits))
+    return acc - offset
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte packing: 2-/4-bit signed codes packed into int8 storage.
+# Layout matches the paper's 32-bit weight vector: element j of a packed
+# byte occupies bits [j*b, (j+1)*b) (little-endian), sign-extended on unpack.
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack int32 codes in [-8, 7] into int8, two per byte, along `axis`."""
+    q = jnp.moveaxis(q, axis, -1)
+    if q.shape[-1] % 2:
+        raise ValueError("pack_int4 needs an even packing dimension")
+    lo = (q[..., 0::2] & 0xF).astype(jnp.uint8)
+    hi = (q[..., 1::2] & 0xF).astype(jnp.uint8)
+    packed = (lo | (hi << 4)).astype(jnp.uint8).view(jnp.int8)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_int4(packed: jax.Array, axis: int = -1) -> jax.Array:
+    """Inverse of pack_int4: int8 storage → int32 sign-extended codes."""
+    p = jnp.moveaxis(packed, axis, -1).view(jnp.uint8)
+    lo = (p & 0xF).astype(jnp.int32)
+    hi = ((p >> 4) & 0xF).astype(jnp.int32)
+    # sign extend 4-bit
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def pack_int2(q: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack int32 codes in [-2, 1] into int8, four per byte, along `axis`."""
+    q = jnp.moveaxis(q, axis, -1)
+    if q.shape[-1] % 4:
+        raise ValueError("pack_int2 needs a packing dimension divisible by 4")
+    b = [(q[..., i::4] & 0x3).astype(jnp.uint8) for i in range(4)]
+    packed = (b[0] | (b[1] << 2) | (b[2] << 4) | (b[3] << 6)).astype(jnp.uint8)
+    return jnp.moveaxis(packed.view(jnp.int8), -1, axis)
+
+
+def unpack_int2(packed: jax.Array, axis: int = -1) -> jax.Array:
+    p = jnp.moveaxis(packed, axis, -1).view(jnp.uint8)
+    outs = []
+    for i in range(4):
+        v = ((p >> (2 * i)) & 0x3).astype(jnp.int32)
+        v = jnp.where(v >= 2, v - 4, v)  # sign extend 2-bit
+        outs.append(v)
+    out = jnp.stack(outs, axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 4)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def pack_weights(q: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Pack `bits`-bit weight codes for storage; int8 passthrough for 8-bit.
+
+    axis defaults to 0 (the reduction/K dimension of a (K, N) weight matrix):
+    packing along K mirrors the paper's 32-bit weight vector that holds
+    multiple K-elements of the same output channel.
+    """
+    if bits == 8:
+        return q.astype(jnp.int8)
+    if bits == 4:
+        return pack_int4(q, axis=axis)
+    if bits == 2:
+        return pack_int2(q, axis=axis)
+    raise ValueError(f"unsupported weight bits {bits}")
+
+
+def unpack_weights(packed: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    if bits == 8:
+        return packed.astype(jnp.int32)
+    if bits == 4:
+        return unpack_int4(packed, axis=axis)
+    if bits == 2:
+        return unpack_int2(packed, axis=axis)
+    raise ValueError(f"unsupported weight bits {bits}")
+
+
+def packed_bytes(shape: Tuple[int, ...], bits: int, axis: int = 0) -> int:
+    """HBM bytes of a packed weight tensor — the quantity the TPU adaptation
+    optimizes (the paper's throughput gain becomes a bandwidth gain here)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return n * bits // 8

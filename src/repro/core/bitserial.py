@@ -1,0 +1,182 @@
+"""Exact bit-serial MAC2 semantics of the M4BRAM BPE (paper §IV-F).
+
+The BPE computes ``P = W1*I1 + W2*I2`` bit-serially over the *activation*
+bits. Per cycle ``n`` it consumes the bit-pair ``{I2[n], I1[n]}`` — bit ``n``
+of each of the two activations — and selects a partial sum from a 4-entry
+lookup table held in the first four dummy-BRAM rows::
+
+    LUT = [0, W1, W2, W1 + W2]          # indexed by (I2[n] << 1) | I1[n]
+    P  += LUT[{I2[n], I1[n]}] << n
+
+Signed activations use the INV row: the most-significant (sign) bit of a
+two's-complement activation has weight ``-2^(n-1)``, so on the final cycle
+the selected partial sum is *inverted* (the INV row stores the negated
+partial sum) before accumulation.
+
+Weights are sign-extended in the dummy array (§IV-F), i.e. the weight side
+is natively signed and needs no correction.
+
+MAC2 latency: ``a_bits + 2`` cycles synchronous, ``ceil(a_bits/2) + 2``
+double-pumped (§IV-F) — modelled in :mod:`repro.core.simulate`; this module
+is the *numerics* oracle used by property tests and by the Pallas kernel's
+reference implementation.
+
+Everything is pure jnp and shape-polymorphic: scalars broadcast, so the same
+function vectorizes a whole matmul tile.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _bit(x: jax.Array, n) -> jax.Array:
+    """Bit n of x interpreted in two's complement (int32 arithmetic shift)."""
+    return (x >> n) & 1
+
+
+def mac2_bitserial(
+    w1: jax.Array,
+    w2: jax.Array,
+    i1: jax.Array,
+    i2: jax.Array,
+    a_bits: int,
+    act_signed: bool = True,
+) -> jax.Array:
+    """Cycle-exact MAC2: returns W1*I1 + W2*I2 via the LUT dataflow.
+
+    Args:
+      w1, w2: signed integer weight codes (any broadcastable shape, int32).
+      i1, i2: signed (or unsigned) integer activation codes, int32, assumed
+        in range for `a_bits`.
+      a_bits: activation precision, 2..8.
+      act_signed: activations are two's complement if True.
+    """
+    w1 = w1.astype(jnp.int32)
+    w2 = w2.astype(jnp.int32)
+    i1 = i1.astype(jnp.int32)
+    i2 = i2.astype(jnp.int32)
+    p = jnp.zeros(jnp.broadcast_shapes(w1.shape, w2.shape, i1.shape, i2.shape), jnp.int32)
+    for n in range(a_bits):
+        b1 = _bit(i1, n)
+        b2 = _bit(i2, n)
+        # LUT select {0, W1, W2, W1+W2} — algebraically b1*W1 + b2*W2.
+        partial = b1 * w1 + b2 * w2
+        if act_signed and n == a_bits - 1:
+            partial = -partial  # INV row: sign bit has weight -2^(n).
+        p = p + (partial << n)
+    return p
+
+
+def dot_bitserial(
+    w: jax.Array,
+    x: jax.Array,
+    a_bits: int,
+    act_signed: bool = True,
+) -> jax.Array:
+    """Bit-serial dot product over K as a chain of MAC2 ops (paper §IV-B).
+
+    The BPE accumulates successive MAC2 results in its last dummy-BRAM row;
+    a dot product of length K takes K/2 MAC2 operations, consuming the K
+    dimension in pairs (W1, W2)/(I1, I2).
+
+    Args:
+      w: (K,) or (K, N) signed weight codes.
+      x: (K,) or (M, K) signed activation codes.
+    Returns:
+      int32 result with standard matmul broadcasting, exactly equal to
+      ``x @ w`` in integer arithmetic.
+    """
+    w = jnp.asarray(w, jnp.int32)
+    x = jnp.asarray(x, jnp.int32)
+    squeeze_w = w.ndim == 1
+    squeeze_x = x.ndim == 1
+    if squeeze_w:
+        w = w[:, None]
+    if squeeze_x:
+        x = x[None, :]
+    K = w.shape[0]
+    if K % 2:
+        # Pad with a zero pair element — the hardware pads the last vector.
+        w = jnp.concatenate([w, jnp.zeros((1, w.shape[1]), w.dtype)], axis=0)
+        x = jnp.concatenate([x, jnp.zeros((x.shape[0], 1), x.dtype)], axis=1)
+        K += 1
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for k in range(0, K, 2):
+        acc = acc + mac2_bitserial(
+            w[k][None, :], w[k + 1][None, :],
+            x[:, k][:, None], x[:, k + 1][:, None],
+            a_bits, act_signed,
+        )
+    if squeeze_w:
+        acc = acc[:, 0]
+    if squeeze_x:
+        acc = acc[0]
+    return acc
+
+
+def matmul_bitplane_reference(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    a_bits: int,
+    act_signed: bool = True,
+    plane_bits: int = 2,
+) -> jax.Array:
+    """Bit-*plane* matmul — the TPU-native restatement of the BPE dataflow.
+
+    Decomposes activations into `plane_bits`-bit unsigned planes (offset
+    binary for signed inputs) and accumulates per-plane integer matmuls with
+    shifts::
+
+        x = sum_p plane_p << (p * plane_bits) - offset
+        x @ w = sum_p (plane_p @ w) << (p * plane_bits) - offset * colsum(w)
+
+    With plane_bits=1 and the sign handled by the final-plane inversion this
+    is *identical* per-cycle math to :func:`mac2_bitserial`; with
+    plane_bits=2 it is the vectorized form our Pallas kernel implements.
+
+    Args:
+      x_codes: (M, K) int32 activation codes.
+      w_codes: (K, N) int32 weight codes.
+    Returns:
+      (M, N) int32, exactly equal to x_codes @ w_codes.
+    """
+    from repro.core import bitplane
+
+    planes, offset = bitplane.to_bitplanes(x_codes, a_bits, plane_bits, act_signed)
+    acc = jnp.zeros((x_codes.shape[0], w_codes.shape[1]), jnp.int32)
+    for p in range(planes.shape[0]):
+        acc = acc + ((planes[p].astype(jnp.int32) @ w_codes) << (p * plane_bits))
+    if act_signed:
+        colsum = jnp.sum(w_codes, axis=0, dtype=jnp.int32)
+        acc = acc - offset * colsum[None, :]
+    return acc
+
+
+def mac2_cycles(a_bits: int, double_pumped: bool) -> int:
+    """MAC2 latency in main-BRAM cycles (paper §IV-F)."""
+    if double_pumped:
+        return -(-a_bits // 2) + 2
+    return a_bits + 2
+
+
+def lanes_per_block(pw: int, large: bool) -> int:
+    """Independent MAC2 lanes per M4BRAM block (Fig. 7b).
+
+    4 BPEs; each BPE's dummy array holds 32 (S) or 64 (L) columns and can
+    serve one 8-bit, two 4-bit, or four 2-bit weight lanes per 32 columns.
+    """
+    per_bpe = (8 // pw) * (2 if large else 1)
+    return 4 * per_bpe
+
+
+def parallelism_configs(pw: int, large: bool) -> Tuple[Tuple[int, int], ...]:
+    """Supported (N_W, N_I) pairs (Fig. 7b): N_W · N_I = lanes, N_I ≤ 4."""
+    lanes = lanes_per_block(pw, large)
+    out = []
+    for ni in (1, 2, 4):
+        if lanes % ni == 0 and lanes // ni >= 1:
+            out.append((lanes // ni, ni))
+    return tuple(out)

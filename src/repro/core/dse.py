@@ -1,0 +1,130 @@
+"""Design-space exploration for tiling configurations (paper §V-A).
+
+Searches (C_VEC, K_VEC, Q_VEC) power-of-two tiles plus the CIM lane config
+(N_W, N_I) per network, subject to the FPGA's DSP/BRAM budgets, maximizing
+the paper's objective perf × (perf/area). One tiling per network (DLA is a
+static overlay; the tile shape is fixed at compile time, the lane config is
+a per-layer runtime knob — we pick the best per layer, matching M4BRAM's
+runtime-configurable duplication factor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+from repro.core import simulate as sim
+from repro.core.workloads import Layer
+
+_POW2 = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+@dataclasses.dataclass
+class DseResult:
+    tile: sim.TileConfig
+    cycles: float
+    perf: float
+    objective: float
+    per_layer_ni: List[int]
+    resources: Tuple[int, int]  # (dsp_used, bram_used)
+
+
+def _candidate_tiles(fpga: sim.Fpga, pw: int, pa: int):
+    packing = sim.dsp_packing(pw, pa)
+    for c in _POW2:
+        if c < 4:
+            continue
+        for k in _POW2:
+            if k < 4:
+                continue
+            for q in (1, 2, 4, 8, 16, 32, 64):
+                if fpga.n_dsp > 0 and c * k * q / packing > fpga.n_dsp * 1.05:
+                    continue
+                yield c, k, q
+
+
+def search(
+    layers: List[Layer],
+    pw: int,
+    pa: int,
+    fpga: sim.Fpga,
+    cim: Optional[sim.CimArch],
+    pw8_fraction: float = 0.0,
+    ni_restrict: Optional[Tuple[int, ...]] = None,
+) -> DseResult:
+    """Find the best tile config; per-layer N_I chosen greedily (runtime
+    configurable in M4BRAM via DP-sram; BRAMAC archs have it fixed)."""
+    best: Optional[DseResult] = None
+    area = sim.area_cost(fpga, cim)
+    lane_cfgs = [(1, 1)]
+    if cim is not None:
+        opts = cim.nw_options(pw)
+        if ni_restrict is not None:
+            opts = tuple((nw, ni) for nw, ni in opts if ni in ni_restrict)
+        lane_cfgs = list(opts) or [(cim.lanes(pw), 1)]
+
+    for c, k, q in _candidate_tiles(fpga, pw, pa):
+        tile0 = sim.TileConfig(c, k, q)
+        if not sim.fits(tile0, layers[0], pw, pa, fpga, cim):
+            continue
+        # Static Q_VEC split (baked into the compiled overlay): search it.
+        q_bpe_options = [0] if cim is None else sorted(
+            {0, q // 4, q // 2, (3 * q) // 4, q - 1, q}
+        )
+        for q_bpe in q_bpe_options:
+            if q_bpe < 0:
+                continue
+            total = 0.0
+            per_layer_ni = []
+            feasible = True
+            for layer in layers:
+                best_layer = None
+                for nw, ni in lane_cfgs:
+                    tile = sim.TileConfig(c, k, q, nw, ni, q_bpe)
+                    if not sim.fits(tile, layer, pw, pa, fpga, cim):
+                        feasible = False
+                        break
+                    r = sim.simulate_layer(layer, tile, pw, pa, fpga, cim,
+                                           pw8_fraction)
+                    if best_layer is None or r.cycles < best_layer[0]:
+                        best_layer = (r.cycles, ni)
+                if not feasible or best_layer is None:
+                    feasible = False
+                    break
+                total += best_layer[0]
+                per_layer_ni.append(best_layer[1])
+            if not feasible or total <= 0:
+                continue
+            perf = 1.0 / total
+            obj = perf * (perf / area)
+            if best is None or obj > best.objective:
+                tile = sim.TileConfig(c, k, q, q_bpe=q_bpe)
+                packing = sim.dsp_packing(pw, pa)
+                max_layer = max(layers, key=lambda l: l.C * l.K * l.R * l.S)
+                n_bram, _ = sim.resource_usage(tile, max_layer, pw, cim, fpga)
+                best = DseResult(
+                    tile=tile, cycles=total, perf=perf, objective=obj,
+                    per_layer_ni=per_layer_ni,
+                    resources=(sim.dsp_needed(tile, packing), n_bram),
+                )
+    if best is None:
+        raise RuntimeError("DSE found no feasible tiling")
+    return best
+
+
+def speedup(
+    layers: List[Layer],
+    pw: int,
+    pa: int,
+    fpga: sim.Fpga,
+    cim: sim.CimArch,
+    baseline_pw: Optional[int] = None,
+    baseline_pa: Optional[int] = None,
+    pw8_fraction: float = 0.0,
+    ni_restrict: Optional[Tuple[int, ...]] = None,
+) -> float:
+    """Hetero-DLA(cim) speedup over plain DLA at (baseline_pw, baseline_pa)
+    (defaults: same precision — the paper's Fig 9/10 setting)."""
+    base = search(layers, baseline_pw or pw, baseline_pa or pa, fpga, None)
+    het = search(layers, pw, pa, fpga, cim, pw8_fraction, ni_restrict)
+    return base.cycles / het.cycles

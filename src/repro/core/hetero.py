@@ -1,0 +1,95 @@
+"""Heterogeneous BPE/DSP workload partitioning (paper §IV-H).
+
+In Hetero-DLA the output-pixel tile dimension ``Q_VEC`` is split between the
+bit-serial engine (all M4BRAM BPEs; latency ∝ activation bits) and the
+bit-parallel engine (all DSPs; 1 MAC2/cycle/DSP with packing). The optimal
+split equalizes the two engines' tile latencies — the tile completes at
+``max(t_bpe, t_dsp)`` (§IV-H), so imbalance directly wastes cycles.
+
+This module provides the static partitioner used by both the performance
+simulator (faithful reproduction) and the TPU mixed-precision group split
+(Table III analogue): given per-unit throughputs it returns the split and
+the resulting latency, plus utilities to balance intra-layer 4b/8b filter
+groups across two compute paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRate:
+    """Effective MACs/cycle of one engine for a given precision config."""
+
+    name: str
+    macs_per_cycle: float
+    fixed_overhead_cycles: float = 0.0
+
+
+def split_q(q_total: int, bpe: EngineRate, dsp: EngineRate) -> Tuple[int, int]:
+    """Split Q_VEC units between BPE and DSP proportionally to throughput.
+
+    Returns (q_bpe, q_dsp) with q_bpe + q_dsp == q_total. Degenerate rates
+    (a disabled engine) route everything to the other engine.
+    """
+    if q_total <= 0:
+        return 0, 0
+    tot = bpe.macs_per_cycle + dsp.macs_per_cycle
+    if tot <= 0:
+        raise ValueError("both engines have zero throughput")
+    if bpe.macs_per_cycle <= 0:
+        return 0, q_total
+    if dsp.macs_per_cycle <= 0:
+        return q_total, 0
+    q_bpe = int(round(q_total * bpe.macs_per_cycle / tot))
+    q_bpe = max(0, min(q_total, q_bpe))
+    return q_bpe, q_total - q_bpe
+
+
+def tile_latency(
+    work_macs: float, q_total: int, bpe: EngineRate, dsp: EngineRate
+) -> Tuple[float, int, int]:
+    """Latency (cycles) of a tile split along Q_VEC; returns (t, q_bpe, q_dsp).
+
+    `work_macs` is the MAC count of the whole tile; each engine gets the
+    fraction of MACs proportional to its share of Q, and the tile latency is
+    the max of the two (plus each engine's fixed overhead) — Fig. 8(c).
+    """
+    q_bpe, q_dsp = split_q(q_total, bpe, dsp)
+    t_bpe = (
+        (work_macs * q_bpe / max(q_total, 1)) / bpe.macs_per_cycle + bpe.fixed_overhead_cycles
+        if q_bpe
+        else 0.0
+    )
+    t_dsp = (
+        (work_macs * q_dsp / max(q_total, 1)) / dsp.macs_per_cycle + dsp.fixed_overhead_cycles
+        if q_dsp
+        else 0.0
+    )
+    return max(t_bpe, t_dsp), q_bpe, q_dsp
+
+
+def balanced_group_ratio(rate_8b: float, rate_lowb: float) -> float:
+    """TPU analogue: fraction of output channels to place in the 8-bit group
+    so that both precision paths finish together when run as two matmuls.
+
+    With per-channel cost 1/rate, equal finish time ⇒
+    R / rate_8b = (1-R) / rate_lowb ⇒ R = rate_8b / (rate_8b + rate_lowb).
+    """
+    if rate_8b <= 0:
+        return 0.0
+    if rate_lowb <= 0:
+        return 1.0
+    return rate_8b / (rate_8b + rate_lowb)
+
+
+def utilization(q_total: int, n_units: int, unit_q: int) -> float:
+    """Spatial utilization of `n_units` engines each covering `unit_q`
+    outputs when `q_total` outputs exist — the quantity M4BRAM's (N_W, N_I)
+    flexibility optimizes (Fig. 4 / §IV-C, Intel study [28])."""
+    if q_total <= 0 or n_units <= 0 or unit_q <= 0:
+        return 0.0
+    per_pass = n_units * unit_q
+    passes = -(-q_total // per_pass)
+    return q_total / (passes * per_pass)

@@ -1,0 +1,234 @@
+"""Functional model of one M4BRAM block (paper §IV).
+
+This is a *behavioural* model — numpy/jnp state, no timing — used to
+property-test the architecture's dataflow end-to-end:
+
+  memory mode : plain 512×32b simple dual-port RAM (M20K compute-mode
+                geometry, §IV-B) with byte enables.
+  compute mode: port-A writes double as CIM instructions when `wenB` is
+                asserted; the duplication shuffler (Fig. 5) slices/replicates
+                the 32-bit weight vector across the 4 BPEs; each BPE runs the
+                bit-serial MAC2 of :mod:`repro.core.bitserial` and
+                accumulates into its ACC row; port-B reads results out while
+                remaining available for "DSP" reads of the main array —
+                the one-port property that distinguishes M4BRAM from BRAMAC.
+
+Timing (cycles, stalls, double-pumping) lives in :mod:`repro.core.simulate`;
+geometry and precision legality live here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import bitserial
+
+MAIN_ROWS = 512          # compute-mode depth (§IV-B)
+MAIN_WIDTH_BITS = 32     # compute-mode data width (§IV-B)
+NUM_BPE = 4              # §IV-A
+DUMMY_ROWS = 7           # §IV-C
+SLICE_BITS = 8           # 32-bit vector → 4 slices A,B,C,D (Fig. 5)
+
+
+@dataclasses.dataclass(frozen=True)
+class M4BramGeometry:
+    """M4BRAM-S vs M4BRAM-L (§IV-G, Table II)."""
+
+    name: str
+    dummy_cols: int            # 32 (S) or 64 (L)
+    area_overhead: float       # vs M20K (§V-B)
+    critical_path_ps: float    # §V-B
+
+    @property
+    def large(self) -> bool:
+        return self.dummy_cols == 64
+
+    def lanes(self, pw: int) -> int:
+        return bitserial.lanes_per_block(pw, self.large)
+
+    def weight_vectors_per_read(self) -> int:
+        # M4BRAM-L banks the main array 2× to fetch two 32-bit vectors.
+        return 2 if self.large else 1
+
+    def readout_stall_cycles(self) -> int:
+        """DSP stall when a dot product is read out (§IV-H): 4 (S) / 8 (L)."""
+        return 8 if self.large else 4
+
+
+M4BRAM_S = M4BramGeometry("M4BRAM-S", 32, 0.196, 903.0)
+M4BRAM_L = M4BramGeometry("M4BRAM-L", 64, 0.334, 925.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CimInstruction:
+    """One CIM instruction (Fig. 6). Two are issued per MAC2 (2 eFSM cycles).
+
+    addr_row/addr_col : location of the weight vector in the main array.
+    addr_dp           : 2-bit slice select for the duplication shuffler.
+    activations       : the 4 input activations carried in port-A data.
+    in_clr            : precision/sign reconfiguration flag (byte-enable
+                        encoding); when set, `a_bits`/`act_signed` update
+                        the eFSM state for subsequent MAC2s.
+    accumulate        : keep accumulating into the ACC row vs clear first.
+    """
+
+    addr_row: int
+    addr_col: int = 0
+    addr_dp: int = 0
+    activations: Tuple[int, int, int, int] = (0, 0, 0, 0)
+    in_clr: bool = False
+    a_bits: Optional[int] = None
+    act_signed: Optional[bool] = None
+    accumulate: bool = True
+
+
+@dataclasses.dataclass
+class M4BramConfig:
+    """Configuration-SRAM state (static per compute phase)."""
+
+    geometry: M4BramGeometry = M4BRAM_S
+    w_bits: int = 8          # config SRAM (§IV-B) — static
+    dp_factor: int = 1       # DP-sram: N_I ∈ {1, 2, 4} (Fig. 5)
+    double_pumped: bool = False
+
+    def __post_init__(self):
+        if self.w_bits not in (2, 4, 8):
+            raise ValueError("w_bits must be 2/4/8")
+        if self.dp_factor not in (1, 2, 4):
+            raise ValueError("dp_factor (N_I) must be 1/2/4")
+
+
+def _signext(v: int, bits: int) -> int:
+    v &= (1 << bits) - 1
+    return v - (1 << bits) if v & (1 << (bits - 1)) else v
+
+
+class M4BramBlock:
+    """One M4BRAM block with a numpy main array and 4 BPE accumulators."""
+
+    def __init__(self, config: M4BramConfig):
+        self.cfg = config
+        self.mem = np.zeros(MAIN_ROWS, dtype=np.uint32)  # 512 × 32b
+        self.mode = "memory"
+        # eFSM dynamic state (set via in_clr instructions)
+        self.a_bits = 8
+        self.act_signed = True
+        # Per-BPE, per-lane accumulators (the last dummy row).
+        lanes_per_bpe = self.cfg.geometry.lanes(self.cfg.w_bits) // NUM_BPE
+        self.acc = np.zeros((NUM_BPE, lanes_per_bpe), dtype=np.int64)
+        self._pending: Optional[CimInstruction] = None
+
+    # ------------------------------------------------------------------ #
+    # Memory mode (also fully available in compute mode through port-B /
+    # the free write port — asserted by tests).
+    # ------------------------------------------------------------------ #
+    def write(self, addr: int, data: int, byte_enable: int = 0xF) -> None:
+        old = int(self.mem[addr])
+        new = int(data) & 0xFFFFFFFF
+        out = 0
+        for b in range(4):
+            sel = new if (byte_enable >> b) & 1 else old
+            out |= sel & (0xFF << (8 * b))
+        self.mem[addr] = out
+
+    def read(self, addr: int) -> int:
+        return int(self.mem[addr])
+
+    def write_weight_vector(self, addr: int, codes: Sequence[int]) -> None:
+        """Pack `w_bits`-bit signed codes little-endian into one 32b word."""
+        pw = self.cfg.w_bits
+        assert len(codes) == MAIN_WIDTH_BITS // pw
+        word = 0
+        for j, c in enumerate(codes):
+            word |= (int(c) & ((1 << pw) - 1)) << (j * pw)
+        self.write(addr, word)
+
+    def _read_weight_codes(self, addr: int) -> List[int]:
+        pw = self.cfg.w_bits
+        word = self.read(addr)
+        return [_signext(word >> (j * pw), pw) for j in range(MAIN_WIDTH_BITS // pw)]
+
+    # ------------------------------------------------------------------ #
+    # Compute mode
+    # ------------------------------------------------------------------ #
+    def set_mode(self, mode: str) -> None:
+        assert mode in ("memory", "compute")
+        self.mode = mode
+
+    def clear_acc(self) -> None:
+        self.acc[:] = 0
+
+    def _shuffle(self, vec_codes: List[int]) -> List[List[int]]:
+        """Duplication shuffler (Fig. 5): 32b → 4 slices; replicate by N_I.
+
+        Returns per-BPE weight-code lists. With dp=1 BPE b gets slice b;
+        with dp=2 slices are duplicated pairwise; with dp=4 one slice is
+        broadcast to all BPEs (addr_dp selects which).
+        """
+        pw = self.cfg.w_bits
+        per_slice = SLICE_BITS // pw if pw <= SLICE_BITS else 1
+        codes_per_vec = len(vec_codes)
+        slices = [
+            vec_codes[s * per_slice : (s + 1) * per_slice]
+            for s in range(codes_per_vec // per_slice)
+        ]
+        dp = self.cfg.dp_factor
+        adp = self._addr_dp
+        if dp == 1:
+            sel = [slices[b % len(slices)] for b in range(NUM_BPE)]
+        elif dp == 2:
+            base = (adp // 2) * 2
+            sel = [slices[(base + (b // 2)) % len(slices)] for b in range(NUM_BPE)]
+        else:  # dp == 4: broadcast addr_dp's slice
+            sel = [slices[adp % len(slices)] for _ in range(NUM_BPE)]
+        return sel
+
+    def issue_mac2(self, inst1: CimInstruction, inst2: CimInstruction) -> np.ndarray:
+        """Two CIM instructions → one MAC2 across all BPE lanes (§IV-E).
+
+        inst1 carries (W-vector-1 address, I1 activations);
+        inst2 carries (W-vector-2 address, I2 activations).
+        Returns the (NUM_BPE, lanes_per_bpe) int64 accumulator snapshot.
+        """
+        assert self.mode == "compute", "MAC2 requires compute mode"
+        for inst in (inst1, inst2):
+            if inst.in_clr:
+                if inst.a_bits is not None:
+                    if not 2 <= inst.a_bits <= 8:
+                        raise ValueError("a_bits must be 2..8")
+                    self.a_bits = inst.a_bits
+                if inst.act_signed is not None:
+                    self.act_signed = inst.act_signed
+        self._addr_dp = inst1.addr_dp
+        w1 = self._read_weight_codes(inst1.addr_row)
+        w2 = self._read_weight_codes(inst2.addr_row)
+        per_bpe_w1 = self._shuffle(w1)
+        per_bpe_w2 = self._shuffle(w2)
+        if not inst1.accumulate:
+            self.clear_acc()
+        import jax.numpy as jnp
+
+        for b in range(NUM_BPE):
+            i1 = int(inst1.activations[b])
+            i2 = int(inst2.activations[b])
+            lw1 = per_bpe_w1[b][: self.acc.shape[1]]
+            lw2 = per_bpe_w2[b][: self.acc.shape[1]]
+            res = bitserial.mac2_bitserial(
+                jnp.array(lw1, jnp.int32),
+                jnp.array(lw2, jnp.int32),
+                jnp.int32(i1),
+                jnp.int32(i2),
+                self.a_bits,
+                self.act_signed,
+            )
+            self.acc[b, : len(lw1)] += np.asarray(res, np.int64)
+        return self.acc.copy()
+
+    def read_result(self) -> np.ndarray:
+        """Port-B result readout (stalls the DSP per geometry; timing in
+        simulate.py). Returns and clears the accumulators."""
+        out = self.acc.copy()
+        self.clear_acc()
+        return out

@@ -1,0 +1,200 @@
+"""QuantizedLinear — the paper's technique as a composable JAX module.
+
+Every linear layer in the model zoo routes through :func:`qmatmul`, which
+dispatches on the weight leaf type and a :class:`~repro.core.quant.QuantConfig`:
+
+  * ``mode='none'``  — plain bf16/fp32 matmul (the FP32 baseline).
+  * ``mode='fake'``  — QAT: STE fake-quant of weights and activations, then a
+    dense matmul. Matches the paper's fine-tuning (§V-A).
+  * ``mode='serve'`` — the M4BRAM path: weights are *stored packed*
+    (2/4/8-bit codes in int8 words, :mod:`repro.core.bitplane`), activations
+    are quantized on the fly, and the product is computed by the bit-plane
+    matmul kernel (:mod:`repro.kernels`). On TPU this is where the paper's
+    throughput-scales-with-precision property becomes
+    HBM-bytes-scale-with-precision.
+
+Intra-layer mixed precision (Table III): a ``PackedWeight`` may carry two
+filter groups — the first ``n8`` output channels at 8-bit and the rest at
+``w_bits`` — mirroring the paper's 4b/8b filter groups computed by the two
+heterogeneous engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+from repro.core.quant import QuantConfig, fake_quant, quantize_tensor, quantize_weights_mixed
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedWeight:
+    """A packed sub-byte weight matrix + dequant scales.
+
+    packed : int8 storage, shape (K * bits // 8, N) — packed along K.
+    scale  : (1, N) per-output-channel dequant scale (float32).
+    bits   : 2/4/8 (static aux data).
+    n8     : Table III mixing — leading n8 output channels are 8-bit packed
+             in `packed8` with scales in `scale` too. 0 disables mixing.
+    packed8: optional int8 (K, n8) storage for the 8-bit group.
+    """
+
+    packed: jax.Array
+    scale: jax.Array
+    bits: int
+    k: int
+    n8: int = 0
+    packed8: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        leaves = (self.packed, self.scale, self.packed8)
+        aux = (self.bits, self.k, self.n8)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        packed, scale, packed8 = leaves
+        bits, k, n8 = aux
+        return cls(packed=packed, scale=scale, bits=bits, k=k, n8=n8, packed8=packed8)
+
+    @property
+    def shape(self):
+        n = self.scale.shape[-1]
+        return (self.k, n)
+
+    def hbm_bytes(self) -> int:
+        n_low = self.shape[1] - self.n8
+        b = self.k * n_low * self.bits // 8 + self.k * self.n8
+        return b + self.scale.size * 4
+
+
+def pack_weight(w: jax.Array, cfg: QuantConfig) -> PackedWeight:
+    """Quantize + pack a dense (K, N) weight matrix for serving."""
+    if w.ndim != 2:
+        raise ValueError(f"pack_weight expects (K, N), got {w.shape}")
+    k, n = w.shape
+    w32 = w.astype(jnp.float32)
+    if cfg.mixed_ratio_8b > 0.0 and cfg.w_bits != 8:
+        q, s, n8 = quantize_weights_mixed(w32, cfg)
+        if n8 == n:
+            return PackedWeight(q.astype(jnp.int8), s.reshape(1, n), 8, k, 0, None)
+        q8, ql = q[:, :n8], q[:, n8:]
+        pk = bitplane.pack_weights(ql, cfg.w_bits, axis=0)
+        return PackedWeight(pk, s.reshape(1, n), cfg.w_bits, k, n8, q8.astype(jnp.int8))
+    q, s = quantize_tensor(w32, cfg.w_bits, True, axis=1 if cfg.per_channel else None)
+    pk = bitplane.pack_weights(q, cfg.w_bits, axis=0)
+    s = jnp.broadcast_to(jnp.asarray(s, jnp.float32).reshape(1, -1), (1, n))
+    return PackedWeight(pk, s, cfg.w_bits, k, 0, None)
+
+
+def unpack_weight(pw: PackedWeight) -> jax.Array:
+    """Dense int32 codes (K, N) for the reference path / tests."""
+    ql = bitplane.unpack_weights(pw.packed, pw.bits, axis=0)
+    if pw.n8:
+        q8 = pw.packed8.astype(jnp.int32)
+        return jnp.concatenate([q8, ql], axis=1)
+    return ql
+
+
+def dequantize_weight(pw: PackedWeight, dtype=jnp.float32) -> jax.Array:
+    return (unpack_weight(pw).astype(jnp.float32) * pw.scale).astype(dtype)
+
+
+def qmatmul(
+    x: jax.Array,
+    w: Union[jax.Array, PackedWeight],
+    cfg: Optional[QuantConfig] = None,
+    mode: str = "none",
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Quantization-aware matmul. x: (..., K); w: (K, N) or PackedWeight."""
+    if isinstance(w, PackedWeight):
+        return _serve_matmul(x, w, cfg, use_kernel=use_kernel)
+    if mode == "none" or cfg is None:
+        return x @ w.astype(x.dtype)
+    if mode == "fake":
+        xq = fake_quant(x, cfg.a_bits, cfg.act_signed)
+        wq = fake_quant(w, cfg.w_bits, True, axis=w.ndim - 1 if cfg.per_channel else None)
+        return xq @ wq.astype(xq.dtype)
+    if mode == "serve":
+        return _serve_matmul(x, pack_weight(w, cfg), cfg, use_kernel=use_kernel)
+    raise ValueError(f"unknown qmatmul mode {mode!r}")
+
+
+def _serve_matmul(
+    x: jax.Array, pw: PackedWeight, cfg: Optional[QuantConfig], use_kernel: bool
+) -> jax.Array:
+    """Packed-weight matmul.
+
+    use_kernel=True — the Pallas bit-plane kernel (exact int path; the real
+    TPU implementation, validated in tests; interpret-mode on CPU so only
+    used outside distributed graphs).
+
+    use_kernel=False — the algebraically *identical* dequant formulation
+    for jit/pjit graphs: (codes_x · s_x) @ (codes_w · s_w). XLA fuses the
+    unpack+scale chain into the matmul on TPU, so HBM sees only packed
+    bytes — the kernel contract the §Perf analysis accounts with.
+    """
+    a_bits = cfg.a_bits if cfg is not None else 8
+    act_signed = cfg.act_signed if cfg is not None else True
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    if k != pw.k:
+        raise ValueError(f"K mismatch: x has {k}, weight has {pw.k}")
+    x2 = x.reshape(-1, k)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        xq, xscale = quantize_tensor(
+            x2.astype(jnp.float32), a_bits, act_signed, axis=0, optimal_clip=False
+        )  # per-row (per-token) scale
+        wq = unpack_weight(pw)
+        acc = kops.bitplane_matmul(xq, wq, a_bits=a_bits, act_signed=act_signed)
+        y = acc.astype(jnp.float32) * xscale.reshape(-1, 1) * pw.scale
+        return y.reshape(*lead, -1).astype(x.dtype)
+    xq = fake_quant(x2, a_bits, act_signed)
+    w = dequantize_weight(pw, dtype=xq.dtype)
+    y = xq @ w
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+_NO_PACK = ("embed", "head", "patch_proj", "frame_proj", "router", "u",
+            "decay_base", "gn_scale", "gn_bias", "conv_w", "lambda_p")
+
+
+def quantize_params_for_serving(params, cfg: QuantConfig, min_size: int = 1 << 16):
+    """Walk a parameter pytree and replace 2-D linear weights with
+    PackedWeight leaves (the serving transformation).
+
+    Exclusions (kept full-precision, matching the paper's treatment of
+    non-GEMM layers): embeddings/heads (consumed by take/transpose paths),
+    frontend projections, routers, and all small vectors/norm scales —
+    plus anything below `min_size` elements.
+    """
+    import re
+
+    from repro.parallel.sharding import tree_path_str
+
+    def maybe_pack(path, leaf):
+        pstr = tree_path_str(path)
+        if any(re.search(rf"(^|/){re.escape(n)}$", pstr) for n in _NO_PACK):
+            return leaf
+        if (
+            not isinstance(leaf, jax.Array)
+            or not jnp.issubdtype(leaf.dtype, jnp.floating)
+            or leaf.size < min_size
+        ):
+            return leaf
+        if leaf.ndim == 2 and leaf.shape[0] % 16 == 0 and min(leaf.shape) >= 128:
+            # min-dim guard: stacked norm scales (L, d) are 2-D but not GEMMs.
+            return pack_weight(leaf, cfg)
+        if leaf.ndim == 3 and leaf.shape[1] % 16 == 0 and leaf.shape[2] >= 16:
+            # Stacked scan-over-layers weights (L, K, N): pack per layer.
+            return jax.vmap(lambda w: pack_weight(w, cfg))(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(maybe_pack, params)

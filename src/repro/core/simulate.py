@@ -1,0 +1,319 @@
+"""Cycle-accurate performance simulator for DLA / Hetero-DLA (paper §V-A).
+
+Reproduces the paper's evaluation stack: a tiled DLA-style accelerator
+(DSP engine with precision-dependent packing, Fig 1) optionally augmented
+with a compute-in-BRAM engine (M4BRAM-S/L, BRAMAC-1DA/2SA, Table II), a
+double-buffered load/compute/store pipeline (Fig 8c), the Q_VEC workload
+split between the engines (§IV-H), BPE readout stalls (4/8 cycles), and
+the one-port (M4BRAM) vs two-port (BRAMAC) interoperability difference —
+modelled as BRAMAC requiring a *duplicate* filter copy for the DSPs (its
+CIM blocks are unreadable during compute, §III-B), which costs BRAM budget
+and therefore CIM parallelism.
+
+Model per layer (conv C,K,R,S,P,Q; weight/act precision Pw/Pa):
+
+  DLA (DSP engine)
+    rate_dsp = n_dsp_used × packing(Pw, Pa) MACs/cycle,
+    padded MACs from (C_VEC, K_VEC, Q_VEC) ceil effects.
+  Filter cache: DLA keeps the layer's filters resident across output
+    tiles — cache bytes = C_VEC · K · R·S · Pw/8, double-buffered. For
+    Hetero-DLA those cache blocks ARE the CIM blocks: every block holding
+    filters contributes `lanes(Pw)` MAC2 lanes (Fig 7b).
+  BPE engine
+    A block completes `lanes` dot products per round:
+      round = ceil(dot_len/2) MAC2 ops × mac2_cycles(Pa) + readout_stall
+    lane utilization: U_K (N_W distinct channels needed), U_Q (N_I distinct
+    pixels needed) — the Fig 4 / Fig 11 trade-off.
+  Split: the layer's output pixels divide between engines ∝ throughput;
+    tile latency = max(t_dsp + stalls, t_bpe, t_ddr_load).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+from repro.core import bitserial
+from repro.core.workloads import Layer
+
+# --------------------------------------------------------------------------
+# Hardware building blocks
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Fpga:
+    name: str
+    n_dsp: int
+    n_bram: int
+    dsp_area: float = 1.0
+    bram_area: float = 0.77  # M20K vs DSP normalized area (from [32])
+
+
+GX400 = Fpga("GX400", 648, 1537)
+GX650 = Fpga("GX650", 1152, 2489)
+
+
+def dsp_packing(pw: int, pa: int, mult_w: int = 18) -> int:
+    """MACs per DSP per cycle (Fig 1): Stratix-10 DSP = 2 × 18-bit mults;
+    pack k copies of the narrower operand: k = 1 + floor((18 − min)/(pw+pa)),
+    capped at 4. Reproduces the paper's breakpoints: at Pw=8 the factor
+    doubles when Pa drops to 5 bits (Fig 9's speedup dip)."""
+    k = 1 + (mult_w - min(pw, pa)) // (pw + pa)
+    return 2 * min(4, max(1, k))
+
+
+@dataclasses.dataclass(frozen=True)
+class CimArch:
+    """A compute-in-BRAM architecture (Table II)."""
+
+    name: str
+    dummy_cols_total: int        # 128 (M4-S), 256 (M4-L), 160/320 (BRAMAC)
+    double_pumped: bool
+    ni_options: Tuple[int, ...]  # weight-sharing factors supported
+    one_port: bool               # True: DSP reads CIM blocks during compute
+    readout_stall: int           # DSP stall cycles per block readout
+    area_overhead: float         # vs M20K (Table II)
+    mixed_precision: bool        # supports Pa != Pw
+
+    def lanes(self, pw: int) -> int:
+        return self.dummy_cols_total // 32 * (8 // pw)
+
+    def mac2_cycles(self, pa: int) -> int:
+        return bitserial.mac2_cycles(pa, self.double_pumped)
+
+    def nw_options(self, pw: int) -> Tuple[Tuple[int, int], ...]:
+        lanes = self.lanes(pw)
+        return tuple((lanes // ni, ni) for ni in self.ni_options if lanes % ni == 0)
+
+
+M4BRAM_S_SY = CimArch("SY-M4S", 128, False, (1, 2, 4), True, 4, 0.196, True)
+M4BRAM_S_DP = CimArch("DP-M4S", 128, True, (1, 2, 4), True, 4, 0.196, True)
+M4BRAM_L_SY = CimArch("SY-M4L", 256, False, (1, 2, 4), True, 8, 0.334, True)
+M4BRAM_L_DP = CimArch("DP-M4L", 256, True, (1, 2, 4), True, 8, 0.334, True)
+BRAMAC_1DA = CimArch("BRAMAC-1DA", 160, True, (1,), False, 4, 0.169, False)
+BRAMAC_2SA = CimArch("BRAMAC-2SA", 320, False, (2,), False, 8, 0.338, False)
+
+CIM_ARCHS = {
+    a.name: a
+    for a in (M4BRAM_S_SY, M4BRAM_S_DP, M4BRAM_L_SY, M4BRAM_L_DP,
+              BRAMAC_1DA, BRAMAC_2SA)
+}
+
+_M20K_MEM_BYTES = 2560      # 20 Kb memory mode
+_M20K_CIM_BYTES = 2048      # 512 × 32b compute-mode geometry
+_DDR_BYTES_PER_CYCLE = 256  # 4 DDR4 banks × 512-bit @ fabric clock
+# BPE feed/copy efficiency: weight-vector copy + activation distribution
+# overhead on top of the (n+2)-cycle MAC2. Calibrated ONCE against the
+# paper's own absolute BPE-vs-DSP measurement (Fig 12: GX-M4 = 1.98×/2.95×
+# GX-DSP); Figs 9/10/11 are then *predictions* (tests/test_simulator.py).
+_BPE_EFFICIENCY = 0.65
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    c_vec: int
+    k_vec: int
+    q_vec: int
+    n_w: int = 1
+    n_i: int = 1
+    q_bpe: int = -1   # pixels of each q_vec tile assigned to the BPE engine
+                      # (static per network, baked into the overlay by DSE;
+                      #  -1 = auto-balance per layer)
+
+
+@dataclasses.dataclass
+class LayerResult:
+    cycles: float
+    dsp_cycles: float
+    bpe_cycles: float
+    load_cycles: float
+    stall_cycles: float
+    macs_bpe_frac: float
+    n_cim: int
+
+
+def _util(dim: int, vec: int) -> float:
+    return dim / (math.ceil(dim / vec) * vec)
+
+
+def _io_blocks(tile: TileConfig, layer: Layer) -> int:
+    """Input/output double-buffered BRAM blocks for the DSP datapath."""
+    in_bytes = tile.c_vec * (tile.q_vec + layer.R - 1) * (layer.S + 7) * 1
+    out_bytes = tile.k_vec * tile.q_vec * 4
+    return (
+        math.ceil(2 * in_bytes / _M20K_MEM_BYTES)
+        + math.ceil(2 * out_bytes / _M20K_MEM_BYTES)
+    )
+
+
+def resource_usage(
+    tile: TileConfig, layer: Layer, pw: int, cim: Optional[CimArch],
+    fpga: Optional[Fpga] = None,
+) -> Tuple[int, int]:
+    """(n_bram_used, n_cim_blocks).
+
+    DLA keeps the layer's *entire* filter set resident (double-buffered
+    against the next layer's load) and spreads it across the BRAM budget;
+    in Hetero-DLA those resident blocks are the CIM engine, so BPE
+    parallelism = resident filter blocks (paper §IV-H: "filter data stored
+    in M4BRAM can be randomly accessed by both the BPE and DSP"). BRAMAC's
+    CIM blocks are unreadable during compute → the DSP needs a duplicate
+    memory-mode copy, costing ~2× budget per filter byte (§III-B).
+    """
+    io = _io_blocks(tile, layer)
+    budget = max((fpga.n_bram if fpga else 10**9) - io, 0)
+    filter_bytes = layer.C * layer.K * layer.R * layer.S * pw / 8
+    if cim is None:
+        n_filter = min(math.ceil(2 * filter_bytes / _M20K_MEM_BYTES), budget)
+        return io + n_filter, 0
+    if cim.one_port:
+        # M4BRAM: filters fill the budget (replicated across blocks when the
+        # set is small — replicas serve different output pixels); every
+        # filter-holding block computes AND feeds the DSPs via its free port.
+        n_cim = budget
+        return io + n_cim, n_cim
+    # BRAMAC: CIM blocks are unreadable during compute → every resident
+    # filter byte needs a CIM copy + a memory-mode copy for the DSPs, so
+    # only ~55% of the budget computes.
+    per_byte = 2 / _M20K_CIM_BYTES + 2 / _M20K_MEM_BYTES
+    cim_share = (2 / _M20K_CIM_BYTES) / per_byte
+    n_cim = int(budget * cim_share)
+    return io + budget, n_cim
+
+
+def dsp_needed(tile: TileConfig, packing: int) -> int:
+    return math.ceil(tile.c_vec * tile.k_vec * tile.q_vec / packing)
+
+
+def fits(tile: TileConfig, layer: Layer, pw: int, pa: int,
+         fpga: Fpga, cim: Optional[CimArch]) -> bool:
+    packing = dsp_packing(pw, pa)
+    if fpga.n_dsp > 0 and dsp_needed(tile, packing) > fpga.n_dsp:
+        return False
+    if fpga.n_dsp == 0 and (cim is None or tile.q_bpe not in (-1, tile.q_vec)):
+        return False  # DSP-less FPGA: all pixels must go to the BPE
+    return _io_blocks(tile, layer) <= fpga.n_bram // 4  # leave room for filters
+
+
+def simulate_layer(
+    layer: Layer,
+    tile: TileConfig,
+    pw: int,
+    pa: int,
+    fpga: Fpga,
+    cim: Optional[CimArch],
+    pw8_fraction: float = 0.0,
+) -> LayerResult:
+    packing = dsp_packing(pw, pa)
+    n_dsp = min(dsp_needed(tile, packing), fpga.n_dsp)
+    _, n_cim = resource_usage(tile, layer, pw, cim, fpga)
+    if fpga.n_dsp == 0 and cim is not None:
+        tile = dataclasses.replace(tile, q_bpe=tile.q_vec)
+
+    # Padded work from tiling granularity (utilization loss from ceils).
+    padded_macs = (
+        math.ceil(layer.C / tile.c_vec) * tile.c_vec
+        * math.ceil(layer.K / tile.k_vec) * tile.k_vec
+        * math.ceil(layer.out_pixels / tile.q_vec) * tile.q_vec
+        * layer.R * layer.S
+    )
+    rate_dsp = n_dsp * packing  # MACs / cycle
+
+    # DDR: inputs + filters once per layer + outputs (double-buffered).
+    load_bytes = (
+        layer.C * (layer.P + layer.R - 1) * (layer.Q + layer.S - 1) * 1
+        + layer.C * layer.K * layer.R * layer.S * pw / 8
+        + layer.K * layer.out_pixels * 1
+    )
+    t_load = load_bytes / _DDR_BYTES_PER_CYCLE
+
+    if cim is None or n_cim == 0:
+        t_dsp = padded_macs / rate_dsp
+        cycles = max(t_dsp, t_load)
+        return LayerResult(cycles, t_dsp, 0.0, t_load, 0.0, 0.0, 0)
+
+    # ---------------- Hetero: BPE engine out of the filter cache ---------
+    n_w, n_i = tile.n_w, tile.n_i
+    lanes = cim.lanes(pw)
+    m2c = cim.mac2_cycles(pa)
+    dot_len = layer.dot_len
+    # One round: a block finishes `lanes` dot products then reads out.
+    round_cycles = math.ceil(dot_len / 2) * m2c + cim.readout_stall
+    # Lane utilization: N_W distinct output channels, N_I distinct pixels.
+    u_k = _util(layer.K, n_w) if layer.K >= 1 else 1.0
+    u_q = _util(layer.out_pixels, n_i)
+    eff = u_k * u_q
+    if pw8_fraction > 0 and pw < 8:
+        # Table III: fraction of channels at 8-bit → fewer lanes per block.
+        lanes8 = cim.lanes(8)
+        eff = eff / ((1 - pw8_fraction) + pw8_fraction * (lanes / lanes8))
+    # MACs/cycle: lanes dot products × dot_len MACs each, per round.
+    rate_bpe = n_cim * lanes * dot_len / round_cycles * eff * _BPE_EFFICIENCY
+
+    # Split along Q_VEC at *tile granularity* (§IV-H): each output tile's
+    # q_vec pixels divide integrally between the engines, so when the BPE
+    # far outruns the DSPs the tile saturates on the DSP share (the paper's
+    # DP-M4L ≈ SY-M4L observation).
+    if tile.q_bpe >= 0:
+        q_bpe_tile = min(tile.q_bpe, tile.q_vec)
+    else:
+        rho = rate_bpe / (rate_bpe + rate_dsp)
+        q_bpe_tile = min(tile.q_vec, max(0, round(tile.q_vec * rho)))
+    frac_bpe = q_bpe_tile / tile.q_vec
+    pq_bpe = int(layer.out_pixels * frac_bpe)
+    if pq_bpe and n_i > 1:
+        pq_bpe = max((pq_bpe // n_i) * n_i, min(n_i, layer.out_pixels))
+    if rate_dsp == 0:
+        pq_bpe = layer.out_pixels
+    pq_dsp = layer.out_pixels - pq_bpe
+
+    macs_dsp = padded_macs * pq_dsp / layer.out_pixels
+    t_dsp = macs_dsp / rate_dsp if pq_dsp else 0.0
+
+    outputs_bpe = pq_bpe * layer.K
+    rounds_total = math.ceil(outputs_bpe / (n_cim * lanes * u_k * max(u_q, 1e-9))) \
+        if pq_bpe else 0
+    # Feed/copy efficiency stretches the effective round time (weight-vector
+    # copies + activation distribution on top of the (n+2)-cycle MAC2).
+    t_bpe = rounds_total * round_cycles / _BPE_EFFICIENCY
+    # Readout stalls block concurrent DSP filter reads (one-port M4BRAM
+    # keeps the *other* port free; the stall is only the result drain).
+    stall = rounds_total * cim.readout_stall if pq_bpe else 0.0
+
+    if cim.one_port:
+        # M4BRAM: the write port is free between CIM instructions → the
+        # next tile's filter load overlaps compute (double-buffering, §IV-H).
+        cycles = max(t_dsp + stall, t_bpe, t_load)
+    else:
+        # BRAMAC: both ports busy during CIM → filter (re)loads into CIM
+        # blocks serialize with compute (Table II: "occupied ports: two").
+        filter_load = (layer.C * layer.K * layer.R * layer.S * pw / 8) \
+            / _DDR_BYTES_PER_CYCLE
+        cycles = max(t_dsp + stall, t_bpe, t_load - filter_load) + filter_load
+    return LayerResult(
+        cycles, t_dsp, t_bpe, t_load, stall,
+        pq_bpe / max(layer.out_pixels, 1), n_cim,
+    )
+
+
+def simulate_network(
+    layers: List[Layer],
+    tile: TileConfig,
+    pw: int,
+    pa: int,
+    fpga: Fpga,
+    cim: Optional[CimArch],
+    pw8_fraction: float = 0.0,
+) -> float:
+    return sum(
+        simulate_layer(l, tile, pw, pa, fpga, cim, pw8_fraction).cycles
+        for l in layers
+    )
+
+
+def area_cost(fpga: Fpga, cim: Optional[CimArch]) -> float:
+    bram = fpga.n_bram * fpga.bram_area
+    if cim is not None:
+        bram *= 1.0 + cim.area_overhead
+    return fpga.n_dsp * fpga.dsp_area + bram

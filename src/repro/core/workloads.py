@@ -1,0 +1,112 @@
+"""DNN benchmark layer tables (paper §V-A): AlexNet, VGG-16, ResNet-18/34,
+and one ViT-Base self-attention module (matmuls as 1×1 convs, per [28]).
+
+Each layer is (C_in, K_out, R, S, P, Q): filter R×S, output P×Q. FC and
+matmul layers use R=S=1 with the GEMM M dimension as P·Q. Batch = 1
+(DLA-style latency evaluation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    name: str
+    C: int   # input channels
+    K: int   # output channels
+    R: int   # filter height
+    S: int   # filter width
+    P: int   # output height
+    Q: int   # output width
+
+    @property
+    def macs(self) -> int:
+        return self.C * self.K * self.R * self.S * self.P * self.Q
+
+    @property
+    def dot_len(self) -> int:
+        return self.C * self.R * self.S
+
+    @property
+    def out_pixels(self) -> int:
+        return self.P * self.Q
+
+
+def _conv(name, c, k, r, p) -> Layer:
+    return Layer(name, c, k, r, r, p, p)
+
+
+def _fc(name, c, k) -> Layer:
+    return Layer(name, c, k, 1, 1, 1, 1)
+
+
+def _mm(name, m, kdim, n) -> Layer:
+    """GEMM M×K×N as 1D conv: C=K-dim, K=N, pixels=M."""
+    return Layer(name, kdim, n, 1, 1, 1, m)
+
+
+ALEXNET: List[Layer] = [
+    _conv("conv1", 3, 64, 11, 55),
+    _conv("conv2", 64, 192, 5, 27),
+    _conv("conv3", 192, 384, 3, 13),
+    _conv("conv4", 384, 256, 3, 13),
+    _conv("conv5", 256, 256, 3, 13),
+    _fc("fc6", 9216, 4096),
+    _fc("fc7", 4096, 4096),
+    _fc("fc8", 4096, 1000),
+]
+
+VGG16: List[Layer] = [
+    _conv("conv1_1", 3, 64, 3, 224), _conv("conv1_2", 64, 64, 3, 224),
+    _conv("conv2_1", 64, 128, 3, 112), _conv("conv2_2", 128, 128, 3, 112),
+    _conv("conv3_1", 128, 256, 3, 56), _conv("conv3_2", 256, 256, 3, 56),
+    _conv("conv3_3", 256, 256, 3, 56),
+    _conv("conv4_1", 256, 512, 3, 28), _conv("conv4_2", 512, 512, 3, 28),
+    _conv("conv4_3", 512, 512, 3, 28),
+    _conv("conv5_1", 512, 512, 3, 14), _conv("conv5_2", 512, 512, 3, 14),
+    _conv("conv5_3", 512, 512, 3, 14),
+    _fc("fc6", 25088, 4096), _fc("fc7", 4096, 4096), _fc("fc8", 4096, 1000),
+]
+
+
+def _resnet_basic(stages: List[int]) -> List[Layer]:
+    layers = [_conv("conv1", 3, 64, 7, 112)]
+    c = 64
+    sizes = [56, 28, 14, 7]
+    chans = [64, 128, 256, 512]
+    for si, (n_blocks, k, hw) in enumerate(zip(stages, chans, sizes)):
+        for b in range(n_blocks):
+            cin = c if b == 0 else k
+            layers.append(_conv(f"s{si}b{b}_conv1", cin, k, 3, hw))
+            layers.append(_conv(f"s{si}b{b}_conv2", k, k, 3, hw))
+            if b == 0 and cin != k:
+                layers.append(Layer(f"s{si}b{b}_down", cin, k, 1, 1, hw, hw))
+        c = k
+    layers.append(_fc("fc", 512, 1000))
+    return layers
+
+
+RESNET18 = _resnet_basic([2, 2, 2, 2])
+RESNET34 = _resnet_basic([3, 4, 6, 3])
+
+# ViT-Base self-attention: d=768, 12 heads, 197 tokens.
+VIT_ATTENTION: List[Layer] = [
+    _mm("qkv_proj", 197, 768, 2304),
+    *[_mm(f"qk_h{h}", 197, 64, 197) for h in range(12)],
+    *[_mm(f"av_h{h}", 197, 197, 64) for h in range(12)],
+    _mm("out_proj", 197, 768, 768),
+]
+
+NETWORKS: Dict[str, List[Layer]] = {
+    "alexnet": ALEXNET,
+    "vgg16": VGG16,
+    "resnet18": RESNET18,
+    "resnet34": RESNET34,
+    "vit-attn": VIT_ATTENTION,
+}
+
+
+def network_macs(name: str) -> int:
+    return sum(l.macs for l in NETWORKS[name])

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataIterator, SyntheticLM  # noqa: F401

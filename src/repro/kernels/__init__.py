@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the M4BRAM reproduction.
+
+  bitplane_matmul : mixed-precision matmul via 2-bit activation planes —
+                    the BPE dataflow vectorized onto the MXU
+  pack_quant      : fused per-token activation quantization
+  wkv6            : RWKV-6 chunked linear-attention mixer
+  ops             : jit'd public wrappers + block-shape selection
+  ref             : pure-jnp oracles (the test specification)
+
+All kernels are written with pl.pallas_call + explicit BlockSpec VMEM tiling
+targeting TPU, and validated on CPU in interpret mode.
+"""
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,165 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+This module is the only kernel entry point the rest of the framework uses.
+It owns:
+  * interpret-vs-compiled dispatch (CPU containers run interpret=True;
+    on TPU `set_interpret(False)` switches to Mosaic lowering),
+  * block-shape selection per operand shape (VMEM budgeting),
+  * the packed/mixed-group compositions used by QuantizedLinear.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+from repro.kernels import bitplane_matmul as _bpm
+from repro.kernels import pack_quant as _pq
+from repro.kernels import wkv6 as _wkv6
+
+_INTERPRET = True  # CPU container default; flipped on real TPU.
+
+
+def set_interpret(value: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = bool(value)
+
+
+def pick_matmul_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """Choose (bm, bn, bk) fitting a ~4 MiB VMEM working-set budget.
+
+    x tile: bm*bk int8; w tile: bk*bn int8; acc: bm*bn int32 (+ Pallas
+    double-buffers the input tiles). MXU wants M/N tiles at multiples of
+    128 and the int8 K lane at multiples of 256 where possible.
+    """
+    bm = 128 if m >= 128 else max(8, _ru(m, 8))
+    bn = 128 if n >= 128 else max(128, _ru(n, 128))
+    bk = 512 if k >= 512 else max(128, _ru(k, 128))
+    # Shrink bk until 2*(bm*bk + bk*bn) + 4*bm*bn <= 4 MiB
+    while 2 * (bm * bk + bk * bn) + 4 * bm * bn > (4 << 20) and bk > 128:
+        bk //= 2
+    return bm, bn, bk
+
+
+def _ru(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def bitplane_matmul(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    *,
+    a_bits: int = 8,
+    act_signed: bool = True,
+    plane_bits: int = 2,
+    blocks: Optional[Tuple[int, int, int]] = None,
+) -> jax.Array:
+    """Exact int matmul of activation codes × weight codes via bit planes."""
+    m, k = x_codes.shape
+    n = w_codes.shape[1]
+    bm, bn, bk = blocks or pick_matmul_blocks(m, n, k)
+    return _bpm.bitplane_matmul(
+        x_codes,
+        w_codes,
+        a_bits=a_bits,
+        act_signed=act_signed,
+        plane_bits=plane_bits,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        interpret=_INTERPRET,
+    )
+
+
+def quantize_rows(x: jax.Array, *, bits: int = 8, signed: bool = True):
+    """Fused per-row (per-token) quantization: (M, K) float → int8 codes + scales."""
+    return _pq.quantize_rows(x, bits=bits, signed=signed, interpret=_INTERPRET)
+
+
+def packed_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    *,
+    w_bits: int,
+    a_bits: int = 8,
+    act_signed: bool = True,
+) -> jax.Array:
+    """float x (M, K) × packed sub-byte weights ((K·bits/8), N) → float (M, N).
+
+    The end-to-end M4BRAM serving path: quantize activations (kernel),
+    unpack weights (VMEM-side layout op), bit-plane matmul (kernel),
+    dequantize with per-token × per-channel scales.
+    """
+    xq, xs = quantize_rows(x.astype(jnp.float32), bits=a_bits, signed=act_signed)
+    wq = bitplane.unpack_weights(packed, w_bits, axis=0)
+    acc = bitplane_matmul(xq, wq, a_bits=a_bits, act_signed=act_signed)
+    return (acc.astype(jnp.float32) * xs * scale.reshape(1, -1)).astype(x.dtype)
+
+
+def mixed_group_matmul(
+    x: jax.Array,
+    w8_codes: jax.Array,
+    wl_packed: jax.Array,
+    scale8: jax.Array,
+    scalel: jax.Array,
+    *,
+    w_bits: int,
+    a_bits: int = 8,
+) -> jax.Array:
+    """Intra-layer mixed 8b/low-bit group matmul (paper Table III).
+
+    The activation quantization is shared between the groups (one kernel
+    pass), then each filter group runs its own bit-plane matmul — the two
+    groups are the TPU analogue of the paper's BPE/DSP heterogeneous split,
+    and XLA schedules them back-to-back on the MXU with no interlock.
+    """
+    xq, xs = quantize_rows(x.astype(jnp.float32), bits=a_bits, signed=True)
+    acc8 = bitplane_matmul(xq, w8_codes.astype(jnp.int32), a_bits=a_bits)
+    wl = bitplane.unpack_weights(wl_packed, w_bits, axis=0)
+    accl = bitplane_matmul(xq, wl, a_bits=a_bits)
+    y8 = acc8.astype(jnp.float32) * xs * scale8.reshape(1, -1)
+    yl = accl.astype(jnp.float32) * xs * scalel.reshape(1, -1)
+    return jnp.concatenate([y8, yl], axis=1).astype(x.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, T, NQ, H)
+    k: jax.Array,  # (B, S, NKV, H)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """GQA-aware flash attention: kv heads are broadcast to the q-head
+    grid, heads fold into the batch grid dim. Returns (B, T, NQ, H)."""
+    from repro.kernels import flash_attention as _fa
+
+    B, T, NQ, H = q.shape
+    NKV = k.shape[2]
+    G = NQ // NKV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * NQ, T, H)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * NQ, -1, H)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * NQ, -1, H)
+    out = _fa.flash_attention(
+        qf, kf, vf, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=_INTERPRET,
+    )
+    return out.reshape(B, NQ, T, H).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 32) -> jax.Array:
+    """Chunked RWKV-6 mixer. See repro/kernels/wkv6.py."""
+    return _wkv6.wkv6(r, k, v, w, u, chunk=chunk, interpret=_INTERPRET)
+
+
+def wkv6_batched(r, k, v, w, u, *, chunk: int = 32) -> jax.Array:
+    """vmapped-over-batch wkv6: r/k/w (B, T, H, K), v (B, T, H, V)."""
+    fn = functools.partial(wkv6, chunk=chunk)
+    return jax.vmap(lambda a, b, c, d: fn(a, b, c, d, u))(r, k, v, w)

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *semantic specification* its kernel is tested against
+(tests/test_kernels_*.py sweep shapes/dtypes/precisions with
+assert_allclose / exact integer equality).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+
+
+def bitplane_matmul_ref(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    a_bits: int,
+    act_signed: bool = True,
+) -> jax.Array:
+    """(M, K) int codes × (K, N) int codes → (M, N) int32, exact."""
+    return (x_codes.astype(jnp.int32) @ w_codes.astype(jnp.int32)).astype(jnp.int32)
+
+
+def quantize_pack_ref(x: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """Per-row absmax symmetric quantization of (M, K) float x to `bits`-bit
+    codes, returned as int8 codes (unpacked; packing is layout-only) and
+    per-row scales (M, 1)."""
+    qhi = (1 << (bits - 1)) - 1
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = absmax / qhi
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(x * inv), -qhi - 1, qhi).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def mixed_group_matmul_ref(
+    x: jax.Array,
+    w8_codes: jax.Array,
+    wl_codes: jax.Array,
+    scale8: jax.Array,
+    scalel: jax.Array,
+    a_bits: int,
+) -> jax.Array:
+    """Intra-layer mixed matmul (Table III): x (M, K) float; the first group
+    is 8-bit codes (K, N8), the second `w_bits`-bit codes (K, NL); output is
+    the float concatenation [x@deq(w8), x@deq(wl)] with activations quantized
+    per-row at a_bits."""
+    q, s = quantize_pack_ref(x.astype(jnp.float32), a_bits)
+    acc8 = q.astype(jnp.int32) @ w8_codes.astype(jnp.int32)
+    accl = q.astype(jnp.int32) @ wl_codes.astype(jnp.int32)
+    y8 = acc8.astype(jnp.float32) * s * scale8.reshape(1, -1)
+    yl = accl.astype(jnp.float32) * s * scalel.reshape(1, -1)
+    return jnp.concatenate([y8, yl], axis=1)
+
+
+def wkv6_ref(
+    r: jax.Array,  # (T, H, K)   receptance
+    k: jax.Array,  # (T, H, K)   key
+    v: jax.Array,  # (T, H, V)   value
+    w: jax.Array,  # (T, H, K)   data-dependent decay, in (0, 1)
+    u: jax.Array,  # (H, K)      bonus for the current token
+) -> jax.Array:
+    """RWKV-6 (Finch) recurrence, sequential reference.
+
+    State S_h ∈ R^{K×V};   out_t = r_t · (S + u ⊙ k_t v_tᵀ);
+                           S ← diag(w_t) S + k_t v_tᵀ.
+    Returns (T, H, V) float32.
+    """
+    T, H, K = r.shape
+    V = v.shape[-1]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (H, K, V)
+        out = jnp.einsum("hk,hkv->hv", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((H, K, V), jnp.float32)
+    _, outs = jax.lax.scan(
+        step, S0, (r.astype(jnp.float32), k.astype(jnp.float32),
+                   v.astype(jnp.float32), w.astype(jnp.float32))
+    )
+    return outs
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (BH, Tq, D)
+    k: jax.Array,  # (BH, Tk, D)
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Naive fp32 softmax attention with causal/window masks."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D**-0.5)
+    qpos = (q_offset + jnp.arange(Tq))[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None], p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))

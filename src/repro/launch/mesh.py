@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi_pod prepends a 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pods: int = 0):
+    """Small mesh for tests (requires xla_force_host_platform_device_count)."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes_of(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,10 @@
+"""Model zoo: 10 assigned architectures over 4 family implementations.
+
+  transformer.py : dense GQA decoders, MoE decoders, encoder, VLM
+  moe.py         : capacity-bounded sort-dispatch MoE FFN (EP / TP)
+  rwkv6.py       : attention-free Finch (chunked wkv6)
+  griffin.py     : RG-LRU + local-attention hybrid
+  kv_cache.py    : decode caches (ring buffers, recurrent states)
+  model_zoo.py   : build_model / input_specs / smoke_batch
+"""
+from repro.models.model_zoo import build_model  # noqa: F401

@@ -1,0 +1,369 @@
+"""Shared model components: norms, rotary embeddings, GQA attention
+(full / sliding-window / prefix-LM / bidirectional; train+prefill+decode),
+FFN variants, and the quantization-aware linear used everywhere.
+
+Attention is implemented as a *chunked online-softmax* (flash-style) scan in
+pure JAX: memory stays O(q_chunk × kv_chunk) per step regardless of sequence
+length, which is what lets 32k-prefill cells compile with bounded
+memory_analysis, and sliding-window attention only ever loads the
+(window + q_chunk) keys a query block can see — sub-quadratic in compute
+*and* memory (required for the long_500k cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig
+from repro.core.quantized_linear import qmatmul
+
+# --------------------------------------------------------------------------
+# Initializers / linear
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def linear(
+    x: jax.Array,
+    w,
+    quant: Optional[QuantConfig] = None,
+    quant_mode: str = "none",
+) -> jax.Array:
+    """All model matmuls route through the paper's technique."""
+    if quant is None or quant_mode == "none":
+        if hasattr(w, "packed"):  # PackedWeight arrives even without cfg
+            return qmatmul(x, w, None)
+        return x @ w.astype(x.dtype)
+    return qmatmul(x, w, quant, mode=quant_mode)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def norm_init(cfg_norm: str, d: int, dtype=jnp.float32):
+    if cfg_norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+    if cfg_norm == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if cfg_norm == "nonparam_ln":
+        return {}
+    raise ValueError(cfg_norm)
+
+
+def apply_norm(x: jax.Array, params: dict, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    # nonparam_ln (olmo): no affine parameters at all
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (stablelm / llama4)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, n, h) rotated by per-position angles; positions: (..., T)."""
+    h = x.shape[-1]
+    half = h // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Chunked (flash-style) attention
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnMask:
+    causal: bool = True
+    window: int = 0        # >0: key j visible iff q_pos - window < j <= q_pos
+    prefix_len: int = 0    # >0: positions < prefix_len attend bidirectionally
+
+
+def _mask_block(qpos, kpos, m: AttnMask):
+    """(Tq, Tk) boolean visibility."""
+    q = qpos[:, None]
+    k = kpos[None, :]
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if m.causal:
+        vis = k <= q
+        if m.prefix_len:
+            vis = vis | ((k < m.prefix_len) & (q < m.prefix_len)) | (k < m.prefix_len)
+        ok = ok & vis
+    if m.window:
+        ok = ok & (k > q - m.window)
+    return ok
+
+
+def _sdp_block(q, k, v, mask, softcap: float, scale: float):
+    """One (q-block × kv-block) attention piece → (scores_exp_sum inputs).
+
+    q: (B, Tq, NKV, G, H); k/v: (B, Tk, NKV, H); mask: (Tq, Tk) bool.
+    Returns scores (B, NKV, G, Tq, Tk) float32, already masked with -inf.
+    """
+    s = jnp.einsum("btngh,bsnh->bngts", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    neg = jnp.finfo(jnp.float32).min
+    return jnp.where(mask[None, None, None], s, neg)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, T, NQ, H)
+    k: jax.Array,  # (B, S, NKV, H)
+    v: jax.Array,  # (B, S, NKV, H)
+    mask: AttnMask,
+    *,
+    q_offset: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Memory-bounded attention; supports GQA, causal, window, prefix-LM.
+
+    Sliding-window attention only slices the (window + q_chunk) keys each
+    query block can see → compute and memory are O(T·window), not O(T²).
+    """
+    B, T, NQ, H = q.shape
+    S = k.shape[1]
+    NKV = k.shape[2]
+    G = NQ // NKV
+    scale = H**-0.5
+
+    qc = min(q_chunk, T)
+    Tp = -(-T // qc) * qc
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qg = q.reshape(B, Tp // qc, qc, NKV, G, H)
+
+    if mask.window and mask.causal and S > mask.window + qc:
+        return _windowed_attention(
+            qg, k, v, mask, q_offset, softcap, scale, qc, T, S
+        )
+
+    kc = min(kv_chunk, S)
+    Sp = -(-S // kc) * kc
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kg = k.reshape(B, Sp // kc, kc, NKV, H)
+    vg = v.reshape(B, Sp // kc, kc, NKV, H)
+
+    def q_block(qi, qb):
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            ki, kb, vb = inp
+            kpos = ki * kc + jnp.arange(kc)
+            blk_mask = _mask_block(qpos, kpos, mask) & (kpos < S)[None, :]
+            s = _sdp_block(qb, kb, vb, blk_mask, softcap, scale)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - safe_m[..., None])
+            p = jnp.where(blk_mask[None, None, None], p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - safe_m), 0.0)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bngts,bsnh->bngth", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        neg = jnp.finfo(jnp.float32).min
+        m0 = jnp.full((B, NKV, G, qc), neg)
+        l0 = jnp.zeros((B, NKV, G, qc))
+        a0 = jnp.zeros((B, NKV, G, qc, H))
+        ks = jnp.moveaxis(kg, 1, 0)
+        vs = jnp.moveaxis(vg, 1, 0)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(Sp // kc), ks, vs)
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # (B, qc, NKV, G, H)
+
+    outs = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(Tp // qc), jnp.moveaxis(qg, 1, 0)),
+    )  # (nq, B, qc, NKV, G, H)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Tp, NQ, H)[:, :T]
+    return out.astype(q.dtype)
+
+
+def _windowed_attention(qg, k, v, mask, q_offset, softcap, scale, qc, T, S):
+    """Sliding-window path: per q block, slice only the visible keys."""
+    B, nQ, _, NKV, G, H = qg.shape
+    w = mask.window
+    span = w + qc
+    # Pad keys at the front so start index arithmetic stays in range.
+    if S < span:
+        k = jnp.pad(k, ((0, 0), (0, span - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, span - S), (0, 0), (0, 0)))
+
+    def q_block(qi, qb):
+        q_lo = q_offset + qi * qc
+        start = jnp.clip(q_lo - w, 0, max(S - span, 0))
+        kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        qpos = q_lo + jnp.arange(qc)
+        kpos = start + jnp.arange(span)
+        blk_mask = _mask_block(qpos, kpos, mask) & (kpos < S)[None, :]
+        s = _sdp_block(qb, kb, vb, blk_mask, softcap, scale)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m)
+        p = jnp.where(blk_mask[None, None, None], p, 0.0)
+        l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        out = jnp.einsum("bngts,bsnh->bngth", p / l, vb.astype(jnp.float32))
+        return jnp.moveaxis(out, 3, 1)  # (B, qc, NKV, G, H)
+
+    outs = jax.lax.map(
+        lambda args: q_block(*args), (jnp.arange(nQ), jnp.moveaxis(qg, 1, 0))
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nQ * qc, NKV * G, H)[:, :T]
+    return out.astype(qg.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, NQ, H) — single new token
+    k_cache: jax.Array,  # (B, S, NKV, H) (bf16, or int8 codes if k_scale)
+    v_cache: jax.Array,
+    kpos: jax.Array,     # (S,) absolute position per cache slot (−1 = empty)
+    q_pos: jax.Array,    # scalar int32 — current position
+    window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (B, S, NKV, 1) int8-cache scales
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """One-token attention over a (possibly ring-buffered, possibly
+    int8-quantized) cache. For the quantized cache, scores are computed on
+    int8 codes and rescaled per key slot — the dequant never materializes
+    a bf16 copy of the cache."""
+    B, _, NQ, H = q.shape
+    NKV = k_cache.shape[2]
+    G = NQ // NKV
+    scale = H**-0.5
+    qr = q.reshape(B, NKV, G, H)
+    s = jnp.einsum("bngh,bsnh->bngs", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32))
+    if k_scale is not None:
+        s = s * jnp.moveaxis(k_scale[..., 0], -1, 1)[:, :, None, :]  # (B,NKV,1,S)
+    s = s * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (kpos >= 0) & (kpos <= q_pos)
+    if window:
+        valid = valid & (kpos > q_pos - window)
+    s = jnp.where(valid[None, None, None], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = p * jnp.moveaxis(v_scale[..., 0], -1, 1)[:, :, None, :]
+    out = jnp.einsum("bngs,bsnh->bngh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, NQ, H).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN variants
+# --------------------------------------------------------------------------
+
+
+def ffn_init(key, cfg, d: int, f: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.ffn in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d, f, dtype),
+            "w_up": dense_init(k2, d, f, dtype),
+            "w_down": dense_init(k3, f, d, dtype),
+        }
+    return {"w_up": dense_init(k1, d, f, dtype), "w_down": dense_init(k2, f, d, dtype)}
+
+
+def ffn_apply(params: dict, x: jax.Array, cfg) -> jax.Array:
+    q, qm = cfg.quant, ("fake" if cfg.quant else "none")
+    if cfg.ffn == "swiglu":
+        g = linear(x, params["w_gate"], q, qm)
+        u = linear(x, params["w_up"], q, qm)
+        h = jax.nn.silu(g) * u
+    elif cfg.ffn == "geglu":
+        g = linear(x, params["w_gate"], q, qm)
+        u = linear(x, params["w_up"], q, qm)
+        h = jax.nn.gelu(g, approximate=True) * u
+    elif cfg.ffn == "relu2":
+        h = jnp.square(jax.nn.relu(linear(x, params["w_up"], q, qm)))
+    elif cfg.ffn == "gelu":
+        h = jax.nn.gelu(linear(x, params["w_up"], q, qm), approximate=True)
+    else:
+        raise ValueError(cfg.ffn)
+    return linear(h, params["w_down"], q, qm)
+
+
+# --------------------------------------------------------------------------
+# Embeddings / logits
+# --------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, scale: bool = False) -> jax.Array:
+    out = jnp.take(table, ids, axis=0)
+    if scale:
+        out = out * (table.shape[1] ** 0.5)
+    return out
+
+
+def logits_head(x: jax.Array, table_or_w, softcap: float = 0.0, transpose: bool = False):
+    w = table_or_w
+    if transpose:
+        out = jnp.einsum("...d,vd->...v", x, w.astype(x.dtype))
+    else:
+        out = x @ w.astype(x.dtype)
+    out = out.astype(jnp.float32)
+    if softcap:
+        out = softcap * jnp.tanh(out / softcap)
+    return out
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4):
+    """Token-level CE with optional z-loss; logits float32 (..., V)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss

@@ -1,0 +1,413 @@
+"""Griffin hybrid (recurrentgemma): RG-LRU recurrent blocks + local attention
+in a 2:1 pattern, GeGLU MLPs, MQA with RoPE.
+
+Recurrence (RG-LRU, arXiv:2402.19427):
+    r_t = sigmoid(y_t A_r + b_r)           # recurrence gate
+    i_t = sigmoid(y_t A_i + b_i)           # input gate
+    a_t = exp(-c · softplus(Λ) · r_t)      # c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ y_t)
+
+Train/prefill evaluates the recurrence with jax.lax.associative_scan
+(log-depth — the TPU-friendly parallel form); decode is an O(1) update.
+The temporal conv (width 4) is causal-depthwise, expressed as 4 shifted
+adds. Layers are scanned in groups of (rglru, rglru, attn); a partial
+remainder group covers num_layers % 3 (38 = 12×3 + 2 for the 9b config).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.kv_cache import DecodeCache, KVCache, RecurrentState, cache_write
+from repro.parallel.sharding import constrain
+
+_C_RGLRU = 8.0
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def _init_rec_mix(key, cfg: ModelConfig) -> dict:
+    d, W = cfg.d_model, cfg.rnn_width
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "rg_in": cm.dense_init(ks[0], d, W, dt),
+        "rg_gate": cm.dense_init(ks[1], d, W, dt),
+        "rg_out": cm.dense_init(ks[2], W, d, dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, W), jnp.float32)
+                   * (1.0 / cfg.conv_width)).astype(dt),
+        "rg_a_proj": cm.dense_init(ks[4], W, W, dt),
+        "rg_i_proj": cm.dense_init(ks[5], W, W, dt),
+        "rg_a_bias": jnp.zeros((W,), jnp.float32),
+        "rg_i_bias": jnp.zeros((W,), jnp.float32),
+        "lambda_p": jnp.full((W,), 0.65, jnp.float32),
+    }
+
+
+def _init_attn_mix(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": cm.dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": cm.dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": cm.dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": cm.dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": cm.norm_init(cfg.norm, cfg.d_model, dt),
+        "ln2": cm.norm_init(cfg.norm, cfg.d_model, dt),
+        "mix": _init_rec_mix(k1, cfg) if kind == "rglru" else _init_attn_mix(k1, cfg),
+        "ffn": cm.ffn_init(k2, cfg, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    pattern = cfg.block_pattern or ("rglru", "rglru", "attn")
+    n_groups = cfg.num_layers // len(pattern)
+    rem = cfg.num_layers % len(pattern)
+    keys = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+
+    def init_group(k):
+        gks = jax.random.split(k, len(pattern))
+        return {f"l{i}_{kind}": _init_layer(gks[i], cfg, kind)
+                for i, kind in enumerate(pattern)}
+
+    group_keys = jax.random.split(keys[0], n_groups)
+    groups = jax.vmap(init_group)(group_keys)
+    params = {
+        "embed": cm.embed_init(keys[1], cfg.vocab, cfg.d_model, dt),
+        "groups": groups,
+        "final_norm": cm.norm_init(cfg.norm, cfg.d_model, dt),
+        "head": cm.dense_init(keys[2], cfg.d_model, cfg.vocab, dt),
+    }
+    if rem:
+        rem_keys = jax.random.split(keys[3], rem)
+        params["rem"] = {
+            f"l{i}_{pattern[i]}": _init_layer(rem_keys[i], cfg, pattern[i])
+            for i in range(rem)
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# RG-LRU + conv
+# --------------------------------------------------------------------------
+
+
+def _causal_conv(a: jax.Array, conv_w: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv via shifted adds. a: (B, T, W); conv_w: (cw, W);
+    tail: (B, cw-1, W) history for decode/streaming (zeros if None)."""
+    cw = conv_w.shape[0]
+    B, T, W = a.shape
+    if tail is None:
+        tail = jnp.zeros((B, cw - 1, W), a.dtype)
+    ext = jnp.concatenate([tail, a], axis=1)  # (B, T+cw-1, W)
+    out = jnp.zeros_like(a)
+    for i in range(cw):
+        out = out + ext[:, i : i + T, :] * conv_w[cw - 1 - i].astype(a.dtype)
+    return out
+
+
+def _rglru_coeffs(mix: dict, y: jax.Array):
+    yf = y.astype(jnp.float32)
+    r = jax.nn.sigmoid(yf @ mix["rg_a_proj"].astype(jnp.float32) + mix["rg_a_bias"])
+    i = jax.nn.sigmoid(yf @ mix["rg_i_proj"].astype(jnp.float32) + mix["rg_i_bias"])
+    log_a = -_C_RGLRU * jax.nn.softplus(mix["lambda_p"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * yf)
+    return a, gated
+
+
+def _rglru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array]):
+    """h_t = a_t h_{t-1} + b_t over axis 1 via associative scan."""
+    if h0 is not None:
+        # Fold carry-in into the first step: b_0 += a_0 * h0.
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rec_mix_apply(mix: dict, cfg: ModelConfig, x: jax.Array,
+                  rec: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Full-seq recurrent temporal mix. x: (B, T, d) normalized.
+    rec: optional (h0 (B, W), conv_tail (B, cw-1, W)).
+    Returns (out, (h_last, conv_tail_new))."""
+    gate = jax.nn.gelu(cm.linear(x, mix["rg_gate"], cfg.quant,
+                                 "fake" if cfg.quant else "none"), approximate=True)
+    a_in = cm.linear(x, mix["rg_in"], cfg.quant, "fake" if cfg.quant else "none")
+    a_in = constrain(a_in, "batch", None, "model")
+    h0, conv_tail = rec if rec is not None else (None, None)
+    y = _causal_conv(a_in, mix["conv_w"], conv_tail)
+    a, b = _rglru_coeffs(mix, y)
+    h = _rglru_scan(a, b, h0)
+    out = cm.linear((h.astype(x.dtype) * gate), mix["rg_out"], cfg.quant,
+                    "fake" if cfg.quant else "none")
+    cw = mix["conv_w"].shape[0]
+    new_tail = a_in[:, -(cw - 1):, :] if a_in.shape[1] >= cw - 1 else jnp.pad(
+        a_in, ((0, 0), (cw - 1 - a_in.shape[1], 0), (0, 0))
+    )
+    return out, (h[:, -1], new_tail)
+
+
+def rec_mix_step(mix: dict, cfg: ModelConfig, x: jax.Array, h0, conv_tail):
+    """Single token. x: (B, 1, d). Returns (out, h_new, conv_tail_new)."""
+    gate = jax.nn.gelu(cm.linear(x, mix["rg_gate"]), approximate=True)
+    a_in = cm.linear(x, mix["rg_in"])  # (B, 1, W)
+    y = _causal_conv(a_in, mix["conv_w"], conv_tail)
+    a, b = _rglru_coeffs(mix, y)
+    h = a[:, 0] * h0 + b[:, 0]
+    out = cm.linear((h[:, None].astype(x.dtype) * gate), mix["rg_out"])
+    new_tail = jnp.concatenate([conv_tail[:, 1:], a_in], axis=1)
+    return out, h, new_tail
+
+
+# --------------------------------------------------------------------------
+# Layer / group application
+# --------------------------------------------------------------------------
+
+
+def _attn_apply(mix, cfg, x, positions):
+    B, T, _ = x.shape
+    hd = cfg.head_dim
+    q = cm.linear(x, mix["wq"]).reshape(B, T, cfg.n_heads, hd)
+    k = cm.linear(x, mix["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = cm.linear(x, mix["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    mask = cm.AttnMask(causal=True, window=cfg.local_window)
+    attn = cm.chunked_attention(q, k, v, mask,
+                                q_chunk=min(cfg.attn_q_chunk, T),
+                                kv_chunk=min(cfg.attn_kv_chunk, T))
+    out = cm.linear(attn.reshape(B, T, cfg.n_heads * hd), mix["wo"])
+    return out, k, v
+
+
+def layer_apply(lp: dict, kind: str, cfg: ModelConfig, x, positions,
+                rec_state=None):
+    """Full-seq layer. Returns (x, mix_state) where mix_state is
+    (h, conv_tail) for rglru or (k, v) for attn."""
+    h = cm.apply_norm(x, lp["ln1"], cfg.norm)
+    if kind == "rglru":
+        out, state = rec_mix_apply(lp["mix"], cfg, h, rec_state)
+    else:
+        out, k, v = _attn_apply(lp["mix"], cfg, h, positions)
+        state = (k, v)
+    x = x + out
+    h2 = cm.apply_norm(x, lp["ln2"], cfg.norm)
+    x = x + cm.ffn_apply(lp["ffn"], h2, cfg)
+    return constrain(x, "batch", None, None), state
+
+
+# --------------------------------------------------------------------------
+# Full model
+# --------------------------------------------------------------------------
+
+
+def _pattern(cfg: ModelConfig):
+    return cfg.block_pattern or ("rglru", "rglru", "attn")
+
+
+def _forward(params, cfg: ModelConfig, tokens, collect: bool):
+    pattern = _pattern(cfg)
+    B, T = tokens.shape
+    x = cm.embed_lookup(params["embed"], tokens, scale=True)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def group_body(carry, gp):
+        xc = carry
+        states = {}
+        for i, kind in enumerate(pattern):
+            xc, st = layer_apply(gp[f"l{i}_{kind}"], kind, cfg, xc, positions)
+            if collect:
+                states[f"l{i}_{kind}"] = st
+        return xc, states if collect else None
+
+    body_fn = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, gstates = jax.lax.scan(body_fn, x, params["groups"])
+
+    rstates = {}
+    if "rem" in params:
+        for name, lp in params["rem"].items():
+            kind = name.split("_", 1)[1]
+            x, st = layer_apply(lp, kind, cfg, x, positions)
+            if collect:
+                rstates[name] = st
+    hidden = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    return hidden, (gstates, rstates)
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    hidden, _ = _forward(params, cfg, batch["tokens"], False)
+    logits = cm.logits_head(hidden, params["head"])
+    logits = constrain(logits, "batch", None, "model")
+    loss = cm.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:]).mean()
+    return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def _pack_cache(cfg: ModelConfig, states, B: int, S: int) -> DecodeCache:
+    """Convert per-group collected states into stacked decode caches."""
+    gstates, rstates = states
+    pattern = _pattern(cfg)
+    w = cfg.local_window
+
+    # Interleave group-stacked states into sequential execution order:
+    # [g0·l0, g0·l1, ..., g1·l0, ...] — the order decode_step indexes with.
+    rec_slots = [i for i, k in enumerate(pattern) if k == "rglru"]
+    att_slots = [i for i, k in enumerate(pattern) if k == "attn"]
+    hs_list, tails_list, ks_list, vs_list = [], [], [], []
+    if rec_slots:
+        hs = jnp.stack([gstates[f"l{i}_rglru"][0] for i in rec_slots], axis=1)
+        tails = jnp.stack([gstates[f"l{i}_rglru"][1] for i in rec_slots], axis=1)
+        hs_list.append(hs.reshape(-1, *hs.shape[2:]))
+        tails_list.append(tails.reshape(-1, *tails.shape[2:]))
+    if att_slots:
+        ks = jnp.stack([gstates[f"l{i}_attn"][0] for i in att_slots], axis=1)
+        vs = jnp.stack([gstates[f"l{i}_attn"][1] for i in att_slots], axis=1)
+        ks_list.append(ks.reshape(-1, *ks.shape[2:]))
+        vs_list.append(vs.reshape(-1, *vs.shape[2:]))
+    for name, st in rstates.items():
+        kind = name.split("_", 1)[1]
+        if kind == "rglru":
+            hs_list.append(st[0][None])
+            tails_list.append(st[1][None])
+        else:
+            ks_list.append(st[0][None])
+            vs_list.append(st[1][None])
+    B_ = 1
+    if not hs_list:  # degenerate attn-only pattern
+        hs_list = [jnp.zeros((0, B_, cfg.rnn_width), jnp.float32)]
+        tails_list = [jnp.zeros((0, B_, cfg.conv_width - 1, cfg.rnn_width),
+                                jnp.dtype(cfg.dtype))]
+    if not ks_list:  # degenerate rglru-only pattern
+        ks_list = [jnp.zeros((0, B_, 1, cfg.n_kv_heads, cfg.head_dim),
+                             jnp.dtype(cfg.dtype))]
+        vs_list = [jnp.zeros_like(ks_list[0])]
+    hs = jnp.concatenate(hs_list, 0)
+    tails = jnp.concatenate(tails_list, 0)
+    k_cat = jnp.concatenate(ks_list, 0)
+    v_cat = jnp.concatenate(vs_list, 0)
+    from repro.models.kv_cache import ring_align
+
+    k_all = k_cat[:, :, -w:] if k_cat.shape[2] > w else k_cat
+    v_all = v_cat[:, :, -w:] if v_cat.shape[2] > w else v_cat
+    k_all, v_all, slot_pos = ring_align(k_all, v_all, S, w)
+
+    rec = RecurrentState(h=hs, conv_tail=tails)
+    kv = KVCache(
+        k=k_all, v=v_all, slot_pos=slot_pos,
+        length=jnp.asarray(S, jnp.int32), window=w,
+    )
+    return DecodeCache(pos=jnp.asarray(S, jnp.int32), kv=kv, rec=rec)
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    hidden, states = _forward(params, cfg, tokens, True)
+    logits = cm.logits_head(hidden[:, -1:], params["head"])
+    return _pack_cache(cfg, states, B, S), logits
+
+
+def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens):
+    pattern = _pattern(cfg)
+    n_rec_per_group = sum(1 for k in pattern if k == "rglru")
+    n_att_per_group = len(pattern) - n_rec_per_group
+    pos = cache.pos
+    x = cm.embed_lookup(params["embed"], tokens, scale=True)
+
+    rec_h, rec_tail = cache.rec.h, cache.rec.conv_tail
+    kvk, kvv, kvp = cache.kv.k, cache.kv.v, cache.kv.slot_pos
+
+    def layer_dec(lp, kind, xc, ri, ai, rh, rt, kk, vv, sp):
+        h = cm.apply_norm(xc, lp["ln1"], cfg.norm)
+        if kind == "rglru":
+            out, hn, tn = rec_mix_step(lp["mix"], cfg, h, rh[ri], rt[ri])
+            rh = rh.at[ri].set(hn)
+            rt = rt.at[ri].set(tn)
+            ri += 1
+        else:
+            B = xc.shape[0]
+            hd = cfg.head_dim
+            q = cm.linear(h, lp["mix"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+            k = cm.linear(h, lp["mix"]["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+            v = cm.linear(h, lp["mix"]["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+            pp = pos[None, None] * jnp.ones((B, 1), jnp.int32)
+            q = cm.rope(q, pp, cfg.rope_theta)
+            k = cm.rope(k, pp, cfg.rope_theta)
+            kc, vc, spc = cache_write(kk[ai], vv[ai], sp[ai], k, v, pos,
+                                      cfg.local_window)
+            attn = cm.decode_attention(q, kc, vc, spc, pos, window=cfg.local_window)
+            out = cm.linear(attn.reshape(B, 1, cfg.n_heads * hd), lp["mix"]["wo"])
+            kk = kk.at[ai].set(kc)
+            vv = vv.at[ai].set(vc)
+            sp = sp.at[ai].set(spc)
+            ai += 1
+        xc = xc + out
+        h2 = cm.apply_norm(xc, lp["ln2"], cfg.norm)
+        xc = xc + cm.ffn_apply(lp["ffn"], h2, cfg)
+        return xc, ri, ai, rh, rt, kk, vv, sp
+
+    n_groups = jax.tree_util.tree_leaves(params["groups"])[0].shape[0]
+    ri_base, ai_base = 0, 0
+    for g in range(n_groups):
+        gp = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+        ri, ai = ri_base, ai_base
+        for i, kind in enumerate(pattern):
+            x, ri, ai, rec_h, rec_tail, kvk, kvv, kvp = layer_dec(
+                gp[f"l{i}_{kind}"], kind, x, ri, ai,
+                rec_h, rec_tail, kvk, kvv, kvp,
+            )
+        ri_base, ai_base = ri, ai
+    if "rem" in params:
+        for name, lp in params["rem"].items():
+            kind = name.split("_", 1)[1]
+            x, ri_base, ai_base, rec_h, rec_tail, kvk, kvv, kvp = layer_dec(
+                lp, kind, x, ri_base, ai_base, rec_h, rec_tail, kvk, kvv, kvp
+            )
+
+    hidden = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = cm.logits_head(hidden, params["head"])
+    new = DecodeCache(
+        pos=pos + 1,
+        kv=KVCache(k=kvk, v=kvv, slot_pos=kvp, length=cache.kv.length + 1,
+                   window=cfg.local_window),
+        rec=RecurrentState(h=rec_h, conv_tail=rec_tail),
+    )
+    return new, logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> DecodeCache:
+    pattern = _pattern(cfg)
+    n_rec = sum(1 for i in range(cfg.num_layers) if pattern[i % len(pattern)] == "rglru")
+    n_att = cfg.num_layers - n_rec
+    dt = jnp.dtype(cfg.dtype)
+    w = cfg.local_window
+    kv = KVCache.init(n_att, batch, min(seq_len, w), cfg.n_kv_heads,
+                      cfg.head_dim, window=w, dtype=dt)
+    rec = RecurrentState(
+        h=jnp.zeros((n_rec, batch, cfg.rnn_width), jnp.float32),
+        conv_tail=jnp.zeros((n_rec, batch, cfg.conv_width - 1, cfg.rnn_width), dt),
+    )
+    return DecodeCache(pos=jnp.asarray(seq_len, jnp.int32), kv=kv, rec=rec)

@@ -1,0 +1,184 @@
+"""Decode-time state structures (registered pytrees).
+
+Attention KV caches are ring buffers when the arch uses sliding-window /
+local attention (cache size = window, not sequence length — this is what
+makes long_500k decode cells feasible for mixtral/recurrentgemma), and
+full-length buffers for global attention. Recurrent families carry O(1)
+states (RG-LRU hidden, conv tail, RWKV wkv state + token-shift tails).
+
+All leaves carry a leading layer (or group) axis so decode steps scan over
+layers exactly like training does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVCache:
+    """k/v: (L, B, S, NKV, H); slot_pos: (L, S) absolute position of each
+    slot (−1 = empty); length: scalar count of tokens written.
+
+    Optional int8 quantization (§Perf lever, the paper's activation-
+    quantization idea applied to the cache): k/v hold int8 codes and
+    k_scale/v_scale hold per-(slot, head) fp32 scales — HBM traffic per
+    decode step drops ~2× (int8 + one scale per head vs bf16)."""
+
+    k: jax.Array
+    v: jax.Array
+    slot_pos: jax.Array
+    length: jax.Array
+    k_scale: Optional[jax.Array] = None  # (L, B, S, NKV, 1) fp32
+    v_scale: Optional[jax.Array] = None
+    window: int = 0  # 0 = full cache; >0 = ring buffer of this size
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.slot_pos, self.length,
+                self.k_scale, self.v_scale), (self.window,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, window=aux[0])
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @staticmethod
+    def init(layers: int, batch: int, size: int, n_kv: int, head_dim: int,
+             window: int = 0, dtype=jnp.bfloat16,
+             quantized: bool = False) -> "KVCache":
+        # Windowed caches are always window-sized rings (slot = pos % window
+        # must never collide with a live position).
+        s = window if window else size
+        kd = jnp.int8 if quantized else dtype
+        scale = (
+            jnp.zeros((layers, batch, s, n_kv, 1), jnp.float32)
+            if quantized else None
+        )
+        return KVCache(
+            k=jnp.zeros((layers, batch, s, n_kv, head_dim), kd),
+            v=jnp.zeros((layers, batch, s, n_kv, head_dim), kd),
+            slot_pos=jnp.full((layers, s), -1, jnp.int32),
+            length=jnp.zeros((), jnp.int32),
+            k_scale=scale,
+            v_scale=jnp.copy(scale) if quantized else None,
+            window=window,
+        )
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(token, head) int8 symmetric quantization of (..., NKV, H)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = absmax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) * inv), -128, 127)
+    return codes.astype(jnp.int8), scale
+
+
+def ring_align(k_last, v_last, S: int, window: int):
+    """Align prefill K/V (last min(S, window) positions in sequence order,
+    layer-stacked: (L, B, s, NKV, H)) to the ring-buffer invariant used by
+    cache_write: position p lives at slot p % ring_size.
+
+    Returns (k, v, slot_pos (L, ring)) with ring = window (padded when
+    S < window; rolled by S % window when S > window so array index and
+    slot agree)."""
+    import jax.numpy as jnp
+
+    L = k_last.shape[0]
+    s = k_last.shape[2]
+    if S <= window:
+        pad = window - s
+        if pad:
+            zk = jnp.zeros((*k_last.shape[:2], pad, *k_last.shape[3:]), k_last.dtype)
+            k_last = jnp.concatenate([k_last, zk], axis=2)
+            v_last = jnp.concatenate([v_last, zk], axis=2)
+        slot_pos = jnp.concatenate(
+            [jnp.arange(s, dtype=jnp.int32),
+             jnp.full((pad,), -1, jnp.int32)]
+        )
+    else:
+        shift = S % window
+        k_last = jnp.roll(k_last, shift, axis=2)
+        v_last = jnp.roll(v_last, shift, axis=2)
+        kept = jnp.arange(S - window, S, dtype=jnp.int32)
+        slot_pos = jnp.zeros((window,), jnp.int32).at[kept % window].set(kept)
+    return k_last, v_last, jnp.broadcast_to(slot_pos, (L, window))
+
+
+def cache_write(k_cache, v_cache, slot_pos, k_new, v_new, pos, window: int):
+    """Write one token's k/v (B, 1, NKV, H) at absolute position `pos`.
+
+    Full cache: slot = pos. Ring buffer: slot = pos % size.
+    Returns updated (k_cache, v_cache, slot_pos).
+    """
+    size = k_cache.shape[1]
+    slot = jnp.where(window > 0, pos % size, jnp.minimum(pos, size - 1))
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        slot_pos, pos[None].astype(jnp.int32), slot, axis=0
+    )
+    return k_cache, v_cache, slot_pos
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RecurrentState:
+    """Griffin recurrent-block state: RG-LRU hidden + causal-conv tail.
+
+    h: (L, B, W); conv_tail: (L, B, conv_width-1, W).
+    """
+
+    h: jax.Array
+    conv_tail: jax.Array
+
+    def tree_flatten(self):
+        return (self.h, self.conv_tail), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RwkvState:
+    """RWKV-6 per-layer state: wkv (L, B, H, K, V) + token-shift tails
+    (L, B, d) for time-mix and channel-mix."""
+
+    wkv: jax.Array
+    tm_shift: jax.Array
+    cm_shift: jax.Array
+
+    def tree_flatten(self):
+        return (self.wkv, self.tm_shift, self.cm_shift), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DecodeCache:
+    """Top-level decode carry: whichever sub-states the family uses, plus
+    the global position counter."""
+
+    pos: jax.Array
+    kv: Optional[KVCache] = None
+    rec: Optional[RecurrentState] = None
+    rwkv: Optional[RwkvState] = None
+
+    def tree_flatten(self):
+        return (self.pos, self.kv, self.rec, self.rwkv), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)

@@ -1,0 +1,101 @@
+"""build_model(cfg) — family dispatch + input_specs for the dry-run.
+
+Every architecture exposes the same surface:
+  init(key)                      → params
+  train_loss(params, batch)      → (loss, metrics)
+  prefill(params, batch)         → (DecodeCache, logits)
+  decode_step(params, cache, tok)→ (DecodeCache, logits)
+  init_cache(batch, seq_len)     → DecodeCache (for decode-shape lowering)
+  input_specs(shape)             → ShapeDtypeStruct pytree (no allocation)
+  smoke_batch(key, shape)        → real small arrays for CPU tests
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import griffin, rwkv6, transformer
+
+
+def _family_module(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return rwkv6
+    if cfg.family == "hybrid":
+        return griffin
+    return transformer  # dense | moe | encoder | vlm
+
+
+def build_model(cfg: ModelConfig) -> SimpleNamespace:
+    mod = _family_module(cfg)
+
+    def init(key):
+        return mod.init_params(key, cfg)
+
+    def train_loss(params, batch):
+        return mod.train_loss(params, cfg, batch)
+
+    def prefill(params, batch):
+        return mod.prefill(params, cfg, batch)
+
+    def decode_step(params, cache, tokens):
+        return mod.decode_step(params, cfg, cache, tokens)
+
+    def init_cache(batch, seq_len):
+        return mod.init_cache(cfg, batch, seq_len)
+
+    def input_specs(shape: ShapeSpec):
+        return make_input_specs(cfg, shape)
+
+    def smoke_batch(key, seq_len: int = 32, batch: int = 2):
+        return make_smoke_batch(cfg, key, seq_len, batch)
+
+    return SimpleNamespace(
+        cfg=cfg, init=init, train_loss=train_loss, prefill=prefill,
+        decode_step=decode_step, init_cache=init_cache,
+        input_specs=input_specs, smoke_batch=smoke_batch,
+    )
+
+
+def make_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.frontend == "frame_stub":
+        batch = {"frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), dt)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return batch
+    if cfg.frontend == "patch_stub":
+        P = cfg.num_prefix_embeds
+        return {
+            "patches": jax.ShapeDtypeStruct((B, P, cfg.frontend_dim), dt),
+            "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+
+def make_smoke_batch(cfg: ModelConfig, key, seq_len: int, batch: int):
+    """Real random arrays matching input_specs at reduced scale."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "frame_stub":
+        return {
+            "frames": jax.random.normal(k1, (batch, seq_len, cfg.frontend_dim), dt),
+            "labels": jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab),
+        }
+    if cfg.frontend == "patch_stub":
+        P = cfg.num_prefix_embeds
+        return {
+            "patches": jax.random.normal(k1, (batch, P, cfg.frontend_dim), dt),
+            "tokens": jax.random.randint(k2, (batch, seq_len - P), 0, cfg.vocab),
+        }
+    return {"tokens": jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab)}

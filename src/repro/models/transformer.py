@@ -1,0 +1,379 @@
+"""Decoder / encoder / VLM transformer (dense and MoE) with scan-over-layers,
+remat, GQA attention and the M4BRAM QuantizedLinear at every projection.
+
+One implementation serves six assigned archs:
+  dense   : nemotron-4-15b/340b, olmo-1b, stablelm-12b
+  vlm     : paligemma-3b (stub patch frontend, prefix-LM masking)
+  encoder : hubert-xlarge (bidirectional, frame-stub frontend, class head)
+  moe     : mixtral-8x22b (+SWA), llama4-maverick (top-1, 128 experts)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models.kv_cache import DecodeCache, KVCache, cache_write
+from repro.parallel.sharding import constrain
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# Free cache slots appended after prefill for subsequently decoded tokens
+# (serving engines re-prefill/rebatch past this; the dry-run decode cell
+# allocates seq_len + headroom the same way via init_cache).
+DECODE_HEADROOM = 8
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d, hd = cfg.d_model, cfg.head_dim
+    dt = _dtype(cfg)
+    p = {
+        "ln1": cm.norm_init(cfg.norm, d, dt),
+        "ln2": cm.norm_init(cfg.norm, d, dt),
+        "wq": cm.dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": cm.dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": cm.dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": cm.dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    if cfg.moe_experts:
+        p["moe"] = moe_mod.init_moe(ks[4], cfg)
+    else:
+        p["ffn"] = cm.ffn_init(ks[5], cfg, d, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    layer_keys = jax.random.split(keys[0], cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    params = {
+        "embed": cm.embed_init(keys[1], cfg.vocab, cfg.d_model, dt),
+        "blocks": blocks,
+        "final_norm": cm.norm_init(cfg.norm, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = cm.dense_init(keys[2], cfg.d_model, cfg.vocab, dt)
+    if cfg.frontend == "patch_stub":
+        params["patch_proj"] = cm.dense_init(keys[3], cfg.frontend_dim, cfg.d_model, dt)
+    elif cfg.frontend == "frame_stub":
+        params["frame_proj"] = cm.dense_init(keys[3], cfg.frontend_dim, cfg.d_model, dt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Block apply (shared across train / prefill / decode)
+# --------------------------------------------------------------------------
+
+
+def _attention_qkv(p, cfg: ModelConfig, x, positions):
+    q_cfg, qm = cfg.quant, ("fake" if cfg.quant else "none")
+    B, T, _ = x.shape
+    hd = cfg.head_dim
+    q = cm.linear(x, p["wq"], q_cfg, qm).reshape(B, T, cfg.n_heads, hd)
+    k = cm.linear(x, p["wk"], q_cfg, qm).reshape(B, T, cfg.n_kv_heads, hd)
+    v = cm.linear(x, p["wv"], q_cfg, qm).reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = cm.rms_head_norm(q, p["q_norm"])
+        k = cm.rms_head_norm(k, p["k_norm"])
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    from repro.parallel.sharding import axis_size
+
+    if cfg.attn_shard == "heads" and cfg.n_heads % max(axis_size("model"), 1) == 0:
+        # TP attention: heads sharded over `model`.
+        q = constrain(q, "batch", None, "model", None)
+        k = constrain(k, "batch", None, "model", None)
+        v = constrain(v, "batch", None, "model", None)
+    else:
+        # Sequence-parallel attention (heads don't divide the model axis,
+        # e.g. llama4's 40 or paligemma's 8 heads on a 16-way mesh): shard
+        # the query sequence dim instead — scores/softmax stay 16-way
+        # sharded, k/v are gathered once per layer. See EXPERIMENTS §Perf B.
+        q = constrain(q, "batch", "model", None, None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    return q, k, v
+
+
+def block_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    mask: cm.AttnMask,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Full-sequence block (train / prefill). Returns (x, k, v, aux_loss)."""
+    h = cm.apply_norm(x, p["ln1"], cfg.norm)
+    q, k, v = _attention_qkv(p, cfg, h, positions)
+    attn = cm.chunked_attention(
+        q, k, v, mask, softcap=cfg.attn_logit_softcap,
+        q_chunk=min(cfg.attn_q_chunk, q.shape[1]),
+        kv_chunk=min(cfg.attn_kv_chunk, k.shape[1]),
+    )
+    attn = attn.reshape(*x.shape[:2], cfg.n_heads * cfg.head_dim)
+    x = x + cm.linear(attn, p["wo"], cfg.quant, "fake" if cfg.quant else "none")
+    h2 = cm.apply_norm(x, p["ln2"], cfg.norm)
+    if cfg.moe_experts:
+        y, aux = moe_mod.moe_apply_shardmap(p["moe"], h2, cfg)
+    else:
+        y, aux = cm.ffn_apply(p["ffn"], h2, cfg), jnp.zeros((), jnp.float32)
+    x = x + y
+    x = constrain(x, "batch", None, None)
+    return x, k, v, aux
+
+
+def block_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, 1, d)
+    pos: jax.Array,          # scalar position
+    k_cache, v_cache, slot_pos, k_scale=None, v_scale=None,
+):
+    """Single-token block against a (ring) cache. Returns x + new cache."""
+    h = cm.apply_norm(x, p["ln1"], cfg.norm)
+    positions = pos[None, None] * jnp.ones((x.shape[0], 1), jnp.int32)
+    q, k, v = _attention_qkv(p, cfg, h, positions)
+    if cfg.kv_cache_quant:
+        from repro.models.kv_cache import quantize_kv
+
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_cache, v_cache, slot_pos = cache_write(
+            k_cache, v_cache, slot_pos, kq, vq, pos, cfg.attn_window
+        )
+        slot = jnp.where(cfg.attn_window > 0, pos % k_cache.shape[1],
+                         jnp.minimum(pos, k_cache.shape[1] - 1))
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, slot, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, slot, axis=1)
+    else:
+        k_cache, v_cache, slot_pos = cache_write(
+            k_cache, v_cache, slot_pos, k, v, pos, cfg.attn_window
+        )
+        k_scale = v_scale = None  # ignore dummy scan placeholders
+    attn = cm.decode_attention(
+        q, k_cache, v_cache, slot_pos, pos,
+        window=cfg.attn_window, softcap=cfg.attn_logit_softcap,
+        k_scale=k_scale, v_scale=v_scale,
+    )
+    attn = attn.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)
+    x = x + cm.linear(attn, p["wo"], cfg.quant, "fake" if cfg.quant else "none")
+    h2 = cm.apply_norm(x, p["ln2"], cfg.norm)
+    if cfg.moe_experts:
+        y, _ = moe_mod.moe_apply_shardmap(p["moe"], h2, cfg)
+    else:
+        y = cm.ffn_apply(p["ffn"], h2, cfg)
+    return x + y, k_cache, v_cache, slot_pos, k_scale, v_scale
+
+
+# --------------------------------------------------------------------------
+# Embedding / inputs
+# --------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x (B, T, d), positions (B, T)) handling frontend stubs."""
+    scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
+    if cfg.frontend == "patch_stub":
+        patches = batch["patches"].astype(_dtype(cfg))  # (B, P, frontend_dim)
+        pe = cm.linear(patches, params["patch_proj"])
+        te = cm.embed_lookup(params["embed"], batch["tokens"], scale=scale)
+        x = jnp.concatenate([pe, te], axis=1)
+    elif cfg.frontend == "frame_stub":
+        frames = batch["frames"].astype(_dtype(cfg))    # (B, T, frontend_dim)
+        x = cm.linear(frames, params["frame_proj"])
+    else:
+        x = cm.embed_lookup(params["embed"], batch["tokens"], scale=scale)
+    B, T = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = constrain(x, "batch", None, None)
+    return x, positions
+
+
+def _mask_for(cfg: ModelConfig) -> cm.AttnMask:
+    return cm.AttnMask(
+        causal=cfg.causal,
+        window=cfg.attn_window,
+        prefix_len=cfg.num_prefix_embeds if cfg.family == "vlm" else 0,
+    )
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+
+def _scan_blocks(params, cfg, x, positions, mask, collect_kv: bool):
+    def body(carry, block_p):
+        xc, aux = carry
+        xn, k, v, a = block_apply(block_p, cfg, xc, positions, mask)
+        out = (k, v) if collect_kv else None
+        return (xn, aux + a), out
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        (x, aux), kv = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    params["blocks"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        kvs = []
+        L = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+        for i in range(L):
+            block_p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            (x, aux), out = body_fn((x, aux), block_p)
+            kvs.append(out)
+        kv = (
+            tuple(jnp.stack([o[j] for o in kvs]) for j in range(2))
+            if collect_kv else None
+        )
+    return x, aux, kv
+
+
+def forward_hidden(params, cfg: ModelConfig, batch):
+    x, positions = embed_inputs(params, cfg, batch)
+    x, aux, _ = _scan_blocks(params, cfg, x, positions, _mask_for(cfg), False)
+    return cm.apply_norm(x, params["final_norm"], cfg.norm), aux
+
+
+def compute_logits(params, cfg: ModelConfig, hidden):
+    if cfg.tie_embeddings:
+        logits = cm.logits_head(hidden, params["embed"],
+                                softcap=cfg.logits_softcap, transpose=True)
+    else:
+        logits = cm.logits_head(hidden, params["head"], softcap=cfg.logits_softcap)
+    return constrain(logits, "batch", None, "model")
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, dict]:
+    hidden, aux = forward_hidden(params, cfg, batch)
+    logits = compute_logits(params, cfg, hidden)
+    if cfg.family == "encoder":
+        labels = batch["labels"]
+        loss = cm.cross_entropy(logits, labels).mean()
+    elif cfg.family == "vlm":
+        P = cfg.num_prefix_embeds
+        text_logits = logits[:, P:-1]
+        labels = batch["tokens"][:, 1:]
+        loss = cm.cross_entropy(text_logits, labels).mean()
+    else:
+        loss = cm.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:]).mean()
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode
+# --------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
+    """Full-sequence forward; returns a DecodeCache and last-token logits."""
+    x, positions = embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    x, _, kv = _scan_blocks(params, cfg, x, positions, _mask_for(cfg), True)
+    k_all, v_all = kv  # (L, B, S, NKV, H)
+    w = cfg.attn_window
+    if w:
+        from repro.models.kv_cache import ring_align
+
+        k_all = k_all[:, :, -w:] if S > w else k_all
+        v_all = v_all[:, :, -w:] if S > w else v_all
+        k_all, v_all, slot_pos = ring_align(k_all, v_all, S, w)
+    else:
+        size = k_all.shape[2]
+        slot_pos = jnp.broadcast_to(jnp.arange(size, dtype=jnp.int32),
+                                    (cfg.num_layers, size))
+    if not w:
+        # Full cache: leave headroom slots for tokens decoded next.
+        pad = DECODE_HEADROOM
+        zk = jnp.zeros((*k_all.shape[:2], pad, *k_all.shape[3:]), k_all.dtype)
+        k_all = jnp.concatenate([k_all, zk], axis=2)
+        v_all = jnp.concatenate([v_all, zk], axis=2)
+        slot_pos = jnp.concatenate(
+            [slot_pos, jnp.full((slot_pos.shape[0], pad), -1, jnp.int32)], axis=1
+        )
+    if cfg.kv_cache_quant:
+        from repro.models.kv_cache import quantize_kv
+
+        k_all, k_scale = quantize_kv(k_all)
+        v_all, v_scale = quantize_kv(v_all)
+    else:
+        k_all = k_all.astype(_dtype(cfg))
+        v_all = v_all.astype(_dtype(cfg))
+        k_scale = v_scale = None
+    kvc = KVCache(
+        k=k_all,
+        v=v_all,
+        slot_pos=slot_pos,
+        length=jnp.asarray(S, jnp.int32),
+        k_scale=k_scale,
+        v_scale=v_scale,
+        window=w,
+    )
+    hidden = cm.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    logits = compute_logits(params, cfg, hidden)
+    return DecodeCache(pos=jnp.asarray(S, jnp.int32), kv=kvc), logits
+
+
+def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array):
+    """tokens: (B, 1) → (new_cache, logits (B, 1, V))."""
+    scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
+    x = cm.embed_lookup(params["embed"], tokens, scale=scale)
+    x = constrain(x, "batch", None, None)
+    pos = cache.pos
+
+    quant = cache.kv.quantized
+
+    def body(xc, layer_in):
+        block_p, kc, vc, sp, ks, vs = layer_in
+        xn, kc, vc, sp, ks, vs = block_decode(
+            block_p, cfg, xc, pos, kc, vc, sp, ks, vs
+        )
+        return xn, (kc, vc, sp, ks, vs)
+
+    L = cfg.num_layers
+    ks_in = cache.kv.k_scale if quant else jnp.zeros((L, 0))
+    vs_in = cache.kv.v_scale if quant else jnp.zeros((L, 0))
+    x, (k_new, v_new, sp_new, ks_new, vs_new) = jax.lax.scan(
+        body, x,
+        (params["blocks"], cache.kv.k, cache.kv.v, cache.kv.slot_pos,
+         ks_in, vs_in),
+    )
+    hidden = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = compute_logits(params, cfg, hidden)
+    new_cache = DecodeCache(
+        pos=pos + 1,
+        kv=KVCache(k=k_new, v=v_new, slot_pos=sp_new,
+                   length=cache.kv.length + 1,
+                   k_scale=ks_new if quant else None,
+                   v_scale=vs_new if quant else None,
+                   window=cfg.attn_window),
+    )
+    return new_cache, logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> DecodeCache:
+    """Empty cache sized for decoding after `seq_len` tokens of context."""
+    kvc = KVCache.init(
+        cfg.num_layers, batch, seq_len + DECODE_HEADROOM, cfg.n_kv_heads,
+        cfg.head_dim, window=cfg.attn_window, dtype=_dtype(cfg),
+        quantized=cfg.kv_cache_quant,
+    )
+    return DecodeCache(pos=jnp.asarray(seq_len, jnp.int32), kv=kvc)

@@ -1,0 +1,98 @@
+"""AdamW + schedules, from scratch (no optax in this environment).
+
+Mixed-precision discipline: master weights and both moments are fp32
+regardless of compute dtype; the update is computed in fp32 and cast back.
+Moments inherit the parameter's sharding (same shape) so FSDP shards the
+optimizer state for free — the ZeRO-style memory win.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: dict        # first moment  (fp32, same tree as params)
+    nu: dict        # second moment (fp32)
+
+
+def init_state(params) -> AdamState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def cosine_schedule(tc: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - tc.warmup_steps) / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        floor = tc.lr_min_ratio
+        return tc.lr * warm * (floor + (1 - floor) * cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2
+
+
+def apply_updates(
+    params,
+    grads,
+    state: AdamState,
+    tc: TrainConfig,
+    lr_fn: Optional[Callable] = None,
+):
+    """One AdamW step. Weight decay only on matrices (standard practice:
+    no decay on norms/biases/embedding scales)."""
+    lr_fn = lr_fn or cosine_schedule(tc)
+    step = state.step + 1
+    lr = lr_fn(step).astype(jnp.float32)
+    b1, b2, eps = tc.beta1, tc.beta2, tc.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if tc.weight_decay and _is_matrix(p):
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v), lr

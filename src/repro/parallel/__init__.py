@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    batch_sharding,
+    cache_shardings,
+    constrain,
+    make_param_shardings,
+    set_mesh_context,
+)

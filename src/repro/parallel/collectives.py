@@ -1,0 +1,93 @@
+"""Distributed-optimization collectives.
+
+Gradient compression (beyond-paper, but built from the paper's own
+quantizer): int8 block-quantized gradients with *error feedback* — the
+residual of each compression round is added back before the next round, so
+the scheme is unbiased in the long run (Karimireddy et al.-style EF-SGD).
+On the wire this cuts DP all-reduce bytes 4× (fp32→int8), which directly
+shrinks the collective roofline term of train cells; it is exercised by the
+train driver when TrainConfig.grad_compress_bits == 8.
+
+Hierarchical pod reduction: with a ('pod','data') batch sharding XLA already
+emits reduce-scatter(data)+all-reduce(pod)+all-gather(data) for FSDP grads;
+`hierarchical_psum` exposes the same pattern for explicit shard_map code.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qmax
+
+
+def quantize_block(x: jax.Array, bits: int = 8, block: int = 256):
+    """Per-block symmetric quantization of a flat fp32 vector."""
+    n = x.size
+    pad = (-n) % block
+    xf = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad))
+    xb = xf.reshape(-1, block)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / qmax(bits)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(xb * inv), -qmax(bits) - 1, qmax(bits)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_block(q: jax.Array, scale: jax.Array, shape, block: int = 256):
+    xb = q.astype(jnp.float32) * scale
+    n = 1
+    for s in shape:
+        n *= s
+    return xb.reshape(-1)[:n].reshape(shape)
+
+
+def compress_gradients(grads, error, bits: int = 8, block: int = 256):
+    """Error-feedback compression: returns (compressed pytree of (q, scale),
+    new error pytree, decompressed gradients to feed the optimizer).
+
+    The decompressed value equals what every peer reconstructs after the
+    all-reduce of the quantized payload — applying it locally keeps replicas
+    bit-identical (the payload is what gets summed by XLA's AR of int32
+    partial sums in a real deployment; here we model value semantics).
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_block(gf, bits, block)
+        deq = dequantize_block(q, s, g.shape, block)
+        return (q, s), gf - deq, deq.astype(g.dtype)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = tdef.unflatten([o[0] for o in outs])
+    new_err = tdef.unflatten([o[1] for o in outs])
+    deq = tdef.unflatten([o[2] for o in outs])
+    return comp, new_err, deq
+
+
+def init_error(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def compressed_bytes(grads, bits: int = 8, block: int = 256) -> int:
+    """Wire bytes of the compressed payload (for the roofline accounting)."""
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size
+        nb = -(-n // block)
+        total += n * bits // 8 + nb * 4
+    return total
+
+
+def hierarchical_psum(x: jax.Array, data_axis: str = "data", pod_axis: str = "pod"):
+    """reduce-scatter in-pod → all-reduce cross-pod → all-gather in-pod.
+
+    For use inside shard_map bodies; equivalent to psum over both axes but
+    moves (1/|data|) of the bytes over the slow inter-pod links.
+    """
+    scat = jax.lax.psum_scatter(x, data_axis, tiled=True)
+    red = jax.lax.psum(scat, pod_axis)
+    return jax.lax.all_gather(red, data_axis, tiled=True)

@@ -1,0 +1,221 @@
+"""Partition rules: DP / TP / FSDP / EP / SP over the production mesh.
+
+Design (T5X/MaxText-style): parameters are matched by *tree-path regex* to a
+PartitionSpec; activations are constrained at a handful of named cut points
+inside the models via :func:`constrain`. One mesh-axis vocabulary everywhere:
+
+  'pod'   — slowest axis; second data-parallel dim (multi-pod DP)
+  'data'  — batch / FSDP axis inside a pod
+  'model' — tensor/expert parallel axis
+
+BATCH_AXES = ('pod', 'data') so a single rule set serves both meshes (specs
+referencing 'pod' are valid on the single-pod mesh too once the axis exists;
+for the single-pod mesh we build specs without 'pod').
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# Mesh-context registry (set by the launcher; models call constrain()).
+# --------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+def set_mesh_context(mesh: Optional[Mesh], batch_axes: Tuple[str, ...] = ("data",)):
+    _ctx.mesh = mesh
+    _ctx.batch_axes = batch_axes
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def axis_size(name: str) -> int:
+    mesh = get_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def batch_axes() -> Tuple[str, ...]:
+    return getattr(_ctx, "batch_axes", ("data",))
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Apply with_sharding_constraint if a mesh context is active.
+
+    `spec` entries: None, 'model', or 'batch' (expands to the batch axes).
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    expanded = tuple(batch_axes() if s == "batch" else s for s in spec)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*expanded)))
+    except ValueError:
+        # Dim not divisible by axis size (e.g. 8 kv heads on a 16-way model
+        # axis): fall back to replicated on that dim — XLA would reject the
+        # constraint, and sharding must stay a no-op semantically.
+        return x
+
+
+# --------------------------------------------------------------------------
+# Parameter partition rules
+# --------------------------------------------------------------------------
+
+Rule = Tuple[str, Tuple]  # (path regex, spec template)
+
+
+def default_param_rules(fsdp: bool) -> List[Rule]:
+    """Regex → spec template. 'F' in a template is the FSDP ('data') axis
+    when fsdp is on, else None. Templates are matched against the
+    '/'-joined tree path of each parameter leaf.
+
+    The TP layout is Megatron-style: column-parallel into attention/FFN,
+    row-parallel out, vocab-sharded embeddings.
+    """
+    F = "data" if fsdp else None
+    return [
+        # Embeddings / heads: vocab on model (big), embed dim on FSDP.
+        (r".*embed$", ("model", F)),
+        (r".*head$", (F, "model")),
+        (r".*patch_proj$", (None, F)),
+        (r".*frame_proj$", (None, F)),
+        # Attention projections.
+        (r".*\bwq$", (F, "model")),
+        (r".*\bwk$", (F, "model")),
+        (r".*\bwv$", (F, "model")),
+        (r".*\bwo$", ("model", F)),
+        # Dense FFN.
+        (r".*w_gate$", (F, "model")),
+        (r".*w_up$", (F, "model")),
+        (r".*w_down$", ("model", F)),
+        # MoE experts (leading expert dim). moe_shard='expert' (EP):
+        (r".*experts_ep/.*w_(gate|up)$", ("model", F, None)),
+        (r".*experts_ep/.*w_down$", ("model", None, F)),
+        # moe_shard='ffn' (TP inside expert):
+        (r".*experts_tp/.*w_(gate|up)$", (None, F, "model")),
+        (r".*experts_tp/.*w_down$", (None, "model", F)),
+        (r".*router$", (F, None)),
+        # Griffin recurrent block.
+        (r".*rg_(in|gate)$", (F, "model")),
+        (r".*rg_out$", ("model", F)),
+        (r".*rg_(a|i)_proj$", (F, "model")),
+        (r".*conv_w$", (None, "model")),
+        (r".*(lambda_p|rg_a_bias|rg_i_bias)$", ("model",)),
+        # RWKV6 time-mix / channel-mix.
+        (r".*tm/w_(recept|key|value)$", (F, "model")),
+        (r".*tm/w_out$", ("model", F)),
+        (r".*tm/decay_a$", (F, None)),
+        (r".*tm/decay_b$", (None, "model")),
+        (r".*cmx/w_(recept|key)$", (F, "model")),
+        (r".*cmx/w_value$", ("model", F)),
+        # Norm scales / biases / small vectors: replicated.
+        (r".*", ()),
+    ]
+
+
+def spec_for_path(path: str, shape: Tuple[int, ...], rules: Sequence[Rule],
+                  mesh: Mesh) -> P:
+    """Resolve a param leaf to a PartitionSpec, dropping axes that don't
+    divide the dim (honest fallback, logged by the dry-run)."""
+    for pat, template in rules:
+        if re.fullmatch(pat, path):
+            return _fit_spec(template, shape, mesh)
+    return P()
+
+
+def _fit_spec(template: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    # Stacked layer/group params carry extra leading dims: left-pad template.
+    pad = len(shape) - len(template)
+    template = (None,) * pad + tuple(template) if pad >= 0 else template[-len(shape):]
+    for dim, ax in zip(shape, template):
+        if ax is None:
+            spec.append(None)
+        elif isinstance(ax, tuple):
+            size = 1
+            for a in ax:
+                size *= axes.get(a, 1)
+            spec.append(ax if dim % size == 0 else None)
+        else:
+            spec.append(ax if dim % axes.get(ax, 1) == 0 else None)
+    return P(*spec)
+
+
+def tree_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def make_param_shardings(params_shape, mesh: Mesh, fsdp: bool):
+    """ShapeDtypeStruct (or array) pytree → NamedSharding pytree."""
+    rules = default_param_rules(fsdp)
+
+    def resolve(path, leaf):
+        spec = spec_for_path(tree_path_str(path), leaf.shape, rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(resolve, params_shape)
+
+
+def batch_sharding(mesh: Mesh, spec, batch_axes_: Tuple[str, ...]):
+    """Shard dim 0 (global batch) over the batch axes; replicate the rest.
+    Falls back to replicated when the batch dim doesn't divide (e.g. the
+    long_500k cell's global_batch=1)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    size = _size(axes, batch_axes_)
+    shape = spec.shape if hasattr(spec, "shape") else spec
+    if not shape or shape[0] % size:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(batch_axes_, *(None,) * (len(shape) - 1)))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(mesh: Mesh, cache_shape, batch_axes_: Tuple[str, ...]):
+    """Decode caches: KV tensors (L, B, S, NKV, H) → batch over data axes and
+    sequence over 'model' (sequence-sharded decode: every model shard scores
+    its slice of the cache; XLA inserts the softmax reductions). States with
+    no sequence dim shard batch only. Scalars replicate."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def resolve(leaf):
+        shp = leaf.shape
+        if len(shp) == 5:  # (L, B, S, NKV, H)
+            b_ok = shp[1] % _size(axes, batch_axes_) == 0
+            s_ok = shp[2] % axes.get("model", 1) == 0
+            return NamedSharding(
+                mesh,
+                P(None, batch_axes_ if b_ok else None, "model" if s_ok else None),
+            )
+        if len(shp) >= 2 and shp[1] % _size(axes, batch_axes_) == 0:
+            return NamedSharding(mesh, P(None, batch_axes_))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(resolve, cache_shape)
+
+
+def _size(axes: dict, names: Tuple[str, ...]) -> int:
+    n = 1
+    for a in names:
+        n *= axes.get(a, 1)
+    return n

@@ -1,0 +1,2 @@
+from repro.roofline import hw  # noqa: F401
+from repro.roofline.analysis import RooflineReport, analyze, model_flops, parse_collectives  # noqa: F401

@@ -1,0 +1,23 @@
+"""TPU v5e hardware constants (the assignment's target part)."""
+
+PEAK_BF16_FLOPS = 197e12      # per chip, bf16
+PEAK_INT8_OPS = 394e12        # per chip, int8 (2x bf16)
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link (~ per-direction)
+HBM_BYTES = 16 * 2**30        # 16 GiB per chip
+VMEM_BYTES = 128 * 2**20      # ~128 MiB vector memory
+MXU_DIM = 128                 # systolic array edge
+
+CHIPS_PER_POD = 256           # 16 x 16 mesh
+
+
+def compute_time_s(flops: float, chips: int = 1) -> float:
+    return flops / (chips * PEAK_BF16_FLOPS)
+
+
+def memory_time_s(bytes_: float, chips: int = 1) -> float:
+    return bytes_ / (chips * HBM_BW)
+
+
+def collective_time_s(bytes_: float, chips: int = 1) -> float:
+    return bytes_ / (chips * ICI_LINK_BW)

@@ -1,0 +1,1 @@
+from repro.train.loop import TrainState, init_train_state, make_train_step, run_training  # noqa: F401

@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests must see 1 CPU device (the dry-run sets its own 512-device flag in
+# subprocesses only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

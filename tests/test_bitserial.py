@@ -1,0 +1,107 @@
+"""Cycle-exact MAC2 / bit-serial semantics vs integer arithmetic (the
+paper's §IV-F dataflow must be *exactly* an integer matmul)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplane, bitserial
+
+A_BITS = st.sampled_from([2, 3, 4, 5, 6, 7, 8])
+W_BITS = st.sampled_from([2, 4, 8])
+
+
+@st.composite
+def mac2_case(draw):
+    ab = draw(A_BITS)
+    signed = draw(st.booleans())
+    lo, hi = (-(1 << (ab - 1)), (1 << (ab - 1)) - 1) if signed else (0, (1 << ab) - 1)
+    n = draw(st.integers(1, 16))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    w1 = rng.integers(-128, 128, n)
+    w2 = rng.integers(-128, 128, n)
+    i1 = rng.integers(lo, hi + 1, n)
+    i2 = rng.integers(lo, hi + 1, n)
+    return ab, signed, w1, w2, i1, i2
+
+
+@settings(max_examples=50, deadline=None)
+@given(mac2_case())
+def test_mac2_exact(case):
+    ab, signed, w1, w2, i1, i2 = case
+    got = bitserial.mac2_bitserial(
+        jnp.asarray(w1), jnp.asarray(w2), jnp.asarray(i1), jnp.asarray(i2),
+        ab, act_signed=signed,
+    )
+    np.testing.assert_array_equal(np.asarray(got), w1 * i1 + w2 * i2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(A_BITS, st.integers(1, 24), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_dot_bitserial_is_integer_matmul(ab, k, n, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (ab - 1)), (1 << (ab - 1)) - 1
+    w = rng.integers(-8, 8, (k, n))
+    x = rng.integers(lo, hi + 1, (3, k))
+    got = bitserial.dot_bitserial(jnp.asarray(w), jnp.asarray(x), ab)
+    np.testing.assert_array_equal(np.asarray(got), x @ w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(A_BITS, st.sampled_from([1, 2]), st.booleans(), st.integers(0, 2**31 - 1))
+def test_bitplane_reference_matches(ab, plane_bits, signed, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = (-(1 << (ab - 1)), (1 << (ab - 1)) - 1) if signed else (0, (1 << ab) - 1)
+    x = rng.integers(lo, hi + 1, (5, 12))
+    w = rng.integers(-128, 128, (12, 7))
+    got = bitserial.matmul_bitplane_reference(
+        jnp.asarray(x), jnp.asarray(w), ab, act_signed=signed, plane_bits=plane_bits
+    )
+    np.testing.assert_array_equal(np.asarray(got), x @ w)
+
+
+@settings(max_examples=30, deadline=None)
+@given(A_BITS, st.sampled_from([1, 2]), st.booleans(), st.integers(0, 2**31 - 1))
+def test_bitplane_roundtrip(ab, plane_bits, signed, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = (-(1 << (ab - 1)), (1 << (ab - 1)) - 1) if signed else (0, (1 << ab) - 1)
+    q = jnp.asarray(rng.integers(lo, hi + 1, (9, 5)), jnp.int32)
+    planes, offset = bitplane.to_bitplanes(q, ab, plane_bits, signed)
+    back = bitplane.from_bitplanes(planes, offset, plane_bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@settings(max_examples=30, deadline=None)
+@given(W_BITS, st.integers(1, 6), st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_pack_unpack_weights(bits, rows16, cols, seed):
+    rng = np.random.default_rng(seed)
+    k = rows16 * 16
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    q = jnp.asarray(rng.integers(lo, hi + 1, (k, cols)), jnp.int32)
+    packed = bitplane.pack_weights(q, bits, axis=0)
+    assert packed.dtype == jnp.int8
+    assert packed.shape[0] == k * bits // 8
+    back = bitplane.unpack_weights(packed, bits, axis=0)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_mac2_cycles_match_paper():
+    # §IV-F: (n+2) sync, (n/2+2) double-pumped.
+    assert bitserial.mac2_cycles(8, False) == 10
+    assert bitserial.mac2_cycles(8, True) == 6
+    assert bitserial.mac2_cycles(5, True) == 5  # ceil(5/2)+2
+    assert bitserial.mac2_cycles(2, False) == 4
+
+
+def test_lanes_per_block_match_fig7b():
+    # M4BRAM-S: one 8b / two 4b / four 2b weights per BPE, 4 BPEs.
+    assert bitserial.lanes_per_block(8, large=False) == 4
+    assert bitserial.lanes_per_block(4, large=False) == 8
+    assert bitserial.lanes_per_block(2, large=False) == 16
+    # M4BRAM-L doubles everything.
+    assert bitserial.lanes_per_block(8, large=True) == 8
+
+
+def test_parallelism_configs_cover_fig4():
+    cfgs = bitserial.parallelism_configs(8, large=False)
+    assert (4, 1) in cfgs and (2, 2) in cfgs and (1, 4) in cfgs

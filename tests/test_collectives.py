@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback + hetero partitioner."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hetero import EngineRate, balanced_group_ratio, split_q, tile_latency, utilization
+from repro.parallel import collectives
+
+
+def test_block_quant_roundtrip_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = collectives.quantize_block(x, bits=8, block=256)
+    back = collectives.dequantize_block(q, s, x.shape, block=256)
+    # per-block absmax 8-bit: error <= scale/2 per element
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert err.max() <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.standard_normal((64,)), jnp.float32)}
+    err = collectives.init_error(g)
+    # constant gradient: with EF, the *running sum* of decompressed grads
+    # converges to the running sum of true grads.
+    total_true = np.zeros(64)
+    total_deq = np.zeros(64)
+    for _ in range(50):
+        _, err, deq = collectives.compress_gradients(g, err, bits=4)
+        total_true += np.asarray(g["w"])
+        total_deq += np.asarray(deq["w"])
+    rel = np.abs(total_deq - total_true).max() / np.abs(total_true).max()
+    assert rel < 0.02
+
+
+def test_compressed_bytes_ratio():
+    g = {"w": jnp.zeros((4096,), jnp.float32)}
+    cb = collectives.compressed_bytes(g, bits=8, block=256)
+    raw = 4096 * 4
+    assert cb < raw / 3  # ≥3x reduction incl. scale overhead
+
+
+def test_split_q_balance():
+    bpe = EngineRate("bpe", 30.0)
+    dsp = EngineRate("dsp", 10.0)
+    qb, qd = split_q(16, bpe, dsp)
+    assert qb + qd == 16 and qb == 12
+    assert split_q(8, EngineRate("x", 0.0), dsp) == (0, 8)
+    assert split_q(8, bpe, EngineRate("x", 0.0)) == (8, 0)
+    with pytest.raises(ValueError):
+        split_q(8, EngineRate("a", 0.0), EngineRate("b", 0.0))
+
+
+def test_tile_latency_max_semantics():
+    t, qb, qd = tile_latency(1000.0, 10, EngineRate("b", 10.0), EngineRate("d", 10.0))
+    assert qb == qd == 5
+    assert t == pytest.approx(50.0)
+
+
+def test_balanced_group_ratio():
+    assert balanced_group_ratio(1.0, 1.0) == pytest.approx(0.5)
+    assert balanced_group_ratio(1.0, 3.0) == pytest.approx(0.25)
+    assert balanced_group_ratio(0.0, 3.0) == 0.0
+
+
+def test_utilization():
+    assert utilization(16, 4, 4) == 1.0
+    assert utilization(17, 4, 4) == pytest.approx(17 / 32)
+    assert utilization(0, 4, 4) == 0.0

@@ -1,0 +1,49 @@
+"""End-to-end driver smoke tests: train CLI → checkpoint → serve CLI with
+the quantized + int8-cache path (subprocesses, reduced configs)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", *args], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=REPO,
+    )
+
+
+def test_train_then_serve_roundtrip(tmp_path):
+    ck = tmp_path / "ckpt"
+    r = _run(["repro.launch.train", "--arch", "olmo-1b", "--reduced",
+              "--steps", "6", "--global-batch", "4", "--seq", "32",
+              "--ckpt", str(ck)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "done:" in r.stdout
+    assert any(p.name.isdigit() for p in ck.iterdir()), "no checkpoint written"
+
+    r2 = _run(["repro.launch.serve", "--arch", "olmo-1b", "--reduced",
+               "--ckpt", str(ck), "--quant", "w4a8", "--kv-int8",
+               "--requests", "2", "--max-new", "4"])
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "restored checkpoint" in r2.stdout
+    assert "2 requests, 8 tokens" in r2.stdout
+
+
+def test_train_resumes_on_fake_mesh(tmp_path):
+    """Elastic path: train on 1 device, resume on a fake 2x2 mesh."""
+    ck = tmp_path / "ckpt"
+    r = _run(["repro.launch.train", "--arch", "olmo-1b", "--reduced",
+              "--steps", "4", "--global-batch", "4", "--seq", "32",
+              "--ckpt", str(ck)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    r2 = _run(["repro.launch.train", "--arch", "olmo-1b", "--reduced",
+               "--steps", "8", "--global-batch", "4", "--seq", "32",
+               "--ckpt", str(ck), "--fake-devices", "4",
+               "--mesh-shape", "2,2"])
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "'data': 2, 'model': 2" in r2.stdout

@@ -1,0 +1,134 @@
+"""Behavioural tests for the M4BRAM block model (modes, shuffler, eFSM)."""
+import numpy as np
+import pytest
+
+from repro.core import m4bram
+from repro.core.m4bram import CimInstruction, M4BramBlock, M4BramConfig
+
+
+def test_memory_mode_byte_enable():
+    blk = M4BramBlock(M4BramConfig())
+    blk.write(3, 0xAABBCCDD)
+    assert blk.read(3) == 0xAABBCCDD
+    blk.write(3, 0x11223344, byte_enable=0b0101)  # bytes 0 and 2 only
+    assert blk.read(3) == 0xAA22CC44
+
+
+def test_weight_vector_roundtrip_signed():
+    blk = M4BramBlock(M4BramConfig(w_bits=4))
+    codes = [-8, 7, -1, 3, 0, -5, 2, 1]
+    blk.write_weight_vector(0, codes)
+    assert blk._read_weight_codes(0) == codes
+
+
+def test_compute_dot_product_all_precisions():
+    rng = np.random.default_rng(0)
+    for pw in (2, 4, 8):
+        for ab in (2, 5, 8):
+            lanes_per_bpe = 8 // pw
+            n_out = 4 * lanes_per_bpe
+            K = 6
+            blk = M4BramBlock(M4BramConfig(w_bits=pw, dp_factor=1))
+            blk.set_mode("compute")
+            lo_w, hi_w = -(1 << (pw - 1)), (1 << (pw - 1)) - 1
+            lo_a, hi_a = -(1 << (ab - 1)), (1 << (ab - 1)) - 1
+            W = rng.integers(lo_w, hi_w + 1, (K, n_out))
+            I = rng.integers(lo_a, hi_a + 1, K)
+            for k in range(0, K, 2):
+                blk.write_weight_vector(0, W[k])
+                blk.write_weight_vector(1, W[k + 1])
+                a1 = tuple(int(I[k]) for _ in range(4))
+                a2 = tuple(int(I[k + 1]) for _ in range(4))
+                blk.issue_mac2(
+                    CimInstruction(0, activations=a1, in_clr=True, a_bits=ab),
+                    CimInstruction(1, activations=a2),
+                )
+            res = blk.read_result().reshape(-1)
+            np.testing.assert_array_equal(res, I @ W)
+
+
+def test_shuffler_broadcast_dp4():
+    rng = np.random.default_rng(1)
+    blk = M4BramBlock(M4BramConfig(w_bits=8, dp_factor=4))
+    blk.set_mode("compute")
+    wv = [int(v) for v in rng.integers(-128, 128, 4)]
+    blk.write_weight_vector(0, wv)
+    blk.write_weight_vector(1, [0, 0, 0, 0])
+    acts = tuple(int(v) for v in rng.integers(-8, 8, 4))
+    for sel in range(4):
+        blk.clear_acc()
+        blk.issue_mac2(
+            CimInstruction(0, addr_dp=sel, activations=acts, in_clr=True, a_bits=4),
+            CimInstruction(1, addr_dp=sel, activations=(0, 0, 0, 0)),
+        )
+        res = blk.read_result().reshape(-1)
+        np.testing.assert_array_equal(res, [wv[sel] * a for a in acts])
+
+
+def test_shuffler_dp2_pairs():
+    blk = M4BramBlock(M4BramConfig(w_bits=8, dp_factor=2))
+    blk.set_mode("compute")
+    blk.write_weight_vector(0, [10, 20, 30, 40])
+    blk.write_weight_vector(1, [0, 0, 0, 0])
+    acts = (1, 2, 3, 4)
+    blk.issue_mac2(
+        CimInstruction(0, addr_dp=0, activations=acts, in_clr=True, a_bits=4),
+        CimInstruction(1, addr_dp=0, activations=(0, 0, 0, 0)),
+    )
+    # dp=2: BPE0/1 share slice A(=10), BPE2/3 share slice B(=20).
+    res = blk.read_result().reshape(-1)
+    np.testing.assert_array_equal(res, [10 * 1, 10 * 2, 20 * 3, 20 * 4])
+
+
+def test_in_clr_reconfigures_precision():
+    blk = M4BramBlock(M4BramConfig(w_bits=8))
+    blk.set_mode("compute")
+    blk.write_weight_vector(0, [3, 0, 0, 0])
+    blk.write_weight_vector(1, [0, 0, 0, 0])
+    # 2-bit signed activations: value -2 is representable; +3 is not.
+    blk.issue_mac2(
+        CimInstruction(0, activations=(-2, 0, 0, 0), in_clr=True, a_bits=2),
+        CimInstruction(1, activations=(0, 0, 0, 0)),
+    )
+    res = blk.read_result()
+    assert res[0, 0] == -6
+    assert blk.a_bits == 2
+
+
+def test_memory_mode_available_during_compute():
+    """The one-port property: memory reads/writes still work while the
+    accumulators hold partial results (dual use, §IV-B)."""
+    blk = M4BramBlock(M4BramConfig(w_bits=8))
+    blk.set_mode("compute")
+    blk.write_weight_vector(0, [5, 6, 7, 8])
+    blk.write_weight_vector(1, [0, 0, 0, 0])
+    blk.issue_mac2(
+        CimInstruction(0, activations=(2, 2, 2, 2), in_clr=True, a_bits=4),
+        CimInstruction(1, activations=(0, 0, 0, 0)),
+    )
+    blk.write(100, 0xDEADBEEF)          # port not occupied by BPE
+    assert blk.read(100) == 0xDEADBEEF  # DSP-side read during CIM
+    res = blk.read_result().reshape(-1)
+    np.testing.assert_array_equal(res, [10, 12, 14, 16])
+
+
+def test_invalid_configs_raise():
+    with pytest.raises(ValueError):
+        M4BramConfig(w_bits=3)
+    with pytest.raises(ValueError):
+        M4BramConfig(dp_factor=3)
+    blk = M4BramBlock(M4BramConfig())
+    blk.set_mode("compute")
+    with pytest.raises(ValueError):
+        blk.issue_mac2(
+            CimInstruction(0, in_clr=True, a_bits=9),
+            CimInstruction(1),
+        )
+
+
+def test_geometry_constants_match_table2():
+    assert m4bram.M4BRAM_S.lanes(8) == 4 and m4bram.M4BRAM_L.lanes(8) == 8
+    assert m4bram.M4BRAM_S.readout_stall_cycles() == 4
+    assert m4bram.M4BRAM_L.readout_stall_cycles() == 8
+    assert m4bram.M4BRAM_S.area_overhead == pytest.approx(0.196)
+    assert m4bram.M4BRAM_L.area_overhead == pytest.approx(0.334)

@@ -1,0 +1,165 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of each
+family, one forward/train step on CPU, output shapes + no NaNs; plus
+prefill→decode consistency against the full forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.core.quant import QuantConfig
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finiteness(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = model.smoke_batch(jax.random.PRNGKey(1), seq_len=32, batch=2)
+    loss, metrics = model.train_loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_configs_match_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "rwkv6-3b": (32, 2560, 0, 0, 8960, 65536),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+def test_param_counts_in_expected_range():
+    """Analytic param counts should be within ~35% of the arch's nameplate
+    size (these are public configs; embedding/glu conventions differ)."""
+    anchors = {
+        "nemotron-4-15b": 15e9,
+        "olmo-1b": 1.2e9,
+        "nemotron-4-340b": 340e9,
+        "stablelm-12b": 12e9,
+        "rwkv6-3b": 3e9,
+        "recurrentgemma-9b": 9e9,
+    }
+    for arch, target in anchors.items():
+        n = get_config(arch).param_count()
+        assert 0.6 * target < n < 1.5 * target, (arch, n)
+
+
+DECODE_ARCHS = [a for a in ARCH_IDS if a != "hubert-xlarge"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(tokens[:T]), tokens[T]) must match the full forward
+    logits at the last position (teacher forcing)."""
+    # fp32 to remove bf16 order noise; no-drop MoE capacity because Switch-
+    # style dropping legitimately couples a token's output to its co-batch.
+    cfg = dataclasses.replace(
+        get_reduced_config(arch), dtype="float32", moe_capacity_factor=16.0
+    )
+    model = build_model(cfg)
+    params = model.init(KEY)
+    T = 24
+    batch_full = model.smoke_batch(jax.random.PRNGKey(2), seq_len=T + 1, batch=2)
+    tokens = batch_full["tokens"]
+    batch_prefix = dict(batch_full)
+    batch_prefix["tokens"] = tokens[:, :-1]
+
+    # full forward logits at the final position
+    hidden_logits = _full_logits(model, cfg, params, batch_full)
+    cache, _ = model.prefill(params, batch_prefix)
+    _, dec_logits = model.decode_step(params, cache, tokens[:, -1:])
+
+    a = np.asarray(hidden_logits[:, -1], np.float32)
+    b = np.asarray(dec_logits[:, -1], np.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2)
+
+
+def _full_logits(model, cfg, params, batch):
+    if cfg.family == "ssm":
+        from repro.models import rwkv6
+
+        hidden, _ = rwkv6._forward(params, cfg, batch["tokens"], None)
+        from repro.models import common as cm
+
+        return cm.logits_head(hidden, params["head"])
+    if cfg.family == "hybrid":
+        from repro.models import griffin
+        from repro.models import common as cm
+
+        hidden, _ = griffin._forward(params, cfg, batch["tokens"], False)
+        return cm.logits_head(hidden, params["head"])
+    from repro.models import transformer
+
+    hidden, _ = transformer.forward_hidden(params, cfg, batch)
+    return transformer.compute_logits(params, cfg, hidden)
+
+
+def test_quantized_training_runs():
+    cfg = get_reduced_config("olmo-1b").with_quant(QuantConfig(w_bits=4, a_bits=6))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = model.smoke_batch(jax.random.PRNGKey(3), seq_len=16, batch=2)
+    loss, _ = model.train_loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree_util.tree_leaves(g))
+
+
+def test_scan_vs_unrolled_equivalence():
+    cfg = get_reduced_config("olmo-1b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = model.smoke_batch(jax.random.PRNGKey(4), seq_len=16, batch=2)
+    loss_scan, _ = model.train_loss(params, batch)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    model2 = build_model(cfg2)
+    loss_unroll, _ = model2.train_loss(params, batch)
+    np.testing.assert_allclose(float(loss_scan), float(loss_unroll), rtol=1e-5)
+
+
+def test_moe_routes_to_multiple_experts():
+    cfg = get_reduced_config("mixtral-8x22b")
+    from repro.models import moe as moe_mod
+
+    key = jax.random.PRNGKey(5)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    out, aux = moe_mod.moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) > 0.5  # load-balance loss near 1 for random router
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor=1.25 and a random router, output magnitude is
+    close to the un-dropped dense mixture (sanity on dispatch/combine)."""
+    cfg = get_reduced_config("llama4-maverick-400b-a17b")
+    from repro.models import moe as moe_mod
+
+    key = jax.random.PRNGKey(6)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(key, (1, 64, cfg.d_model), jnp.float32)
+    out, _ = moe_mod.moe_apply(p, x, cfg)
+    nonzero = float(jnp.mean((jnp.abs(out) > 0).any(axis=-1).astype(jnp.float32)))
+    assert nonzero > 0.85  # ≥85% of tokens got an expert (≤15% dropped)

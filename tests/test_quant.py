@@ -1,0 +1,108 @@
+"""Property tests for the quantization core (paper §V-A semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+BITS = st.sampled_from([2, 3, 4, 5, 6, 7, 8])
+W_BITS = st.sampled_from([2, 4, 8])
+
+
+@st.composite
+def float_arrays(draw, max_dim=24):
+    rows = draw(st.integers(1, max_dim))
+    cols = draw(st.integers(1, max_dim))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((rows, cols)) * scale, jnp.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(float_arrays(), BITS)
+def test_codes_in_range(x, bits):
+    q, scale = quant.quantize_tensor(x, bits, optimal_clip=False)
+    assert int(jnp.min(q)) >= quant.qmin(bits)
+    assert int(jnp.max(q)) <= quant.qmax(bits)
+    assert float(jnp.min(scale)) >= 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(float_arrays(), BITS)
+def test_dequant_error_bounded_by_half_step(x, bits):
+    """Inside the clip range, |x - deq(q(x))| <= scale/2."""
+    q, scale = quant.quantize_tensor(x, bits, optimal_clip=False)
+    xq = quant.dequantize(q, scale)
+    thr = scale * quant.qmax(bits)
+    inside = jnp.abs(x) <= thr
+    err = jnp.abs(x - xq)
+    assert float(jnp.max(jnp.where(inside, err, 0.0))) <= float(scale) * 0.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(float_arrays(), W_BITS)
+def test_mae_optimal_no_worse_than_absmax(x, bits):
+    s_opt = quant.mae_optimal_scale(x, bits)
+    s_max = jnp.max(jnp.abs(x)) / quant.qmax(bits)
+
+    def mae(s):
+        q = quant.quantize(x, s, bits)
+        return float(jnp.mean(jnp.abs(x - quant.dequantize(q, s))))
+
+    assert mae(s_opt) <= mae(s_max) + 1e-7
+
+
+def test_fake_quant_ste_gradient():
+    x = jnp.linspace(-2.0, 2.0, 64)
+
+    def f(v):
+        return jnp.sum(quant.fake_quant(v, 4))
+
+    g = jax.grad(f)(x)
+    # Inside the clip range the STE passes gradient 1; clipped region may
+    # be zero. absmax scaling ⇒ everything is inside.
+    assert float(jnp.min(g)) >= 0.0
+    assert float(jnp.max(g)) == pytest.approx(1.0)
+
+
+def test_fake_quant_reduces_precision_monotone():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    errs = []
+    for b in (2, 4, 8):
+        errs.append(float(jnp.mean(jnp.abs(x - quant.fake_quant(x, b)))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 512), st.floats(0.0, 1.0))
+def test_filter_group_split(n_out, ratio):
+    n8, nl = quant.split_filter_groups(n_out, ratio)
+    assert n8 + nl == n_out
+    assert n8 >= 0 and nl >= 0
+    if ratio == 0.0:
+        assert n8 == 0
+
+
+def test_quantize_weights_mixed_roundtrip():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((64, 32)) * 0.1, jnp.float32)
+    cfg = quant.QuantConfig(w_bits=4, a_bits=6, mixed_ratio_8b=0.25)
+    q, s, n8 = quant.quantize_weights_mixed(w, cfg)
+    assert q.shape == w.shape
+    assert 0 < n8 < 32
+    # 8-bit group must reconstruct more accurately than the 4-bit group.
+    err8 = float(jnp.mean(jnp.abs(w[:, :n8] - q[:, :n8] * s[..., :n8])))
+    err4 = float(jnp.mean(jnp.abs(w[:, n8:] - q[:, n8:] * s[..., n8:])))
+    assert err8 < err4
+
+
+def test_quant_error_stats_sqnr_improves_with_bits():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
+    s2 = quant.quant_error_stats(x, 2)
+    s8 = quant.quant_error_stats(x, 8)
+    assert float(s8["sqnr_db"]) > float(s2["sqnr_db"]) + 20

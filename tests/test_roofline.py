@@ -1,0 +1,100 @@
+"""HLO cost parser: trip-count correction, collective accounting."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.roofline import hlo_costs, hw
+from repro.roofline.analysis import model_flops
+
+REPO = Path(__file__).resolve().parents[1]
+
+SYNTH_HLO = """
+HloModule test
+
+%cond (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}
+
+%body (arg.1: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg.1 = (s32[], f32[8,8]) parameter(0)
+  %iv.1 = s32[] get-tuple-element(%arg.1), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%arg.1), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %ivn = s32[] add(%iv.1, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ivn, %ar)
+}
+
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,8]) tuple(%zero, %p)
+  %w = (s32[], f32[8,8]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_synthetic_while_trip_count():
+    costs = hlo_costs.analyze_hlo(SYNTH_HLO)
+    # 5 iterations × (2·8·8·8 flops) from the dot inside the body
+    assert costs.flops == 5 * 2 * 8 * 8 * 8
+    # all-reduce inside the loop: 5 × 2 × 256 bytes
+    assert costs.collective_bytes == 5 * 2 * 8 * 8 * 4
+    assert costs.loop_trip_counts.get("body") == 5
+
+
+def test_scan_matches_unrolled_flops():
+    """The critical property: a scanned L-layer model must report ≈ the
+    unrolled model's flops (runs a subprocess with 4 fake devices)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses, jax, jax.numpy as jnp, sys
+sys.path.insert(0, "SRC")
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.roofline import hlo_costs
+cfg = dataclasses.replace(get_reduced_config("olmo-1b"), num_layers=4, remat=False)
+out = {}
+for scan in (True, False):
+    c = dataclasses.replace(cfg, scan_layers=scan)
+    m = build_model(c)
+    params = jax.eval_shape(m.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 128), jnp.int32)}
+    comp = jax.jit(lambda p, b: m.train_loss(p, b)[0]).lower(params, batch).compile()
+    out[scan] = hlo_costs.analyze_hlo(comp.as_text()).flops
+ratio = out[True] / out[False]
+assert 0.9 < ratio < 1.15, ratio
+print("OK", ratio)
+""".replace("SRC", str(REPO / "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_model_flops_conventions():
+    from repro.configs import get_config
+
+    cfg = get_config("olmo-1b")
+    n = cfg.param_count()
+    assert model_flops(cfg, "train", 4096, 256) == 6.0 * n * 4096 * 256
+    assert model_flops(cfg, "prefill", 32768, 32) == 2.0 * n * 32768 * 32
+    assert model_flops(cfg, "decode", 32768, 128) == 2.0 * n * 128
+
+    moe = get_config("mixtral-8x22b")
+    assert moe.active_param_count() < 0.45 * moe.param_count()
+
+
+def test_hw_constants():
+    assert hw.PEAK_BF16_FLOPS == 197e12
+    assert hw.HBM_BW == 819e9
+    assert hw.ICI_LINK_BW == 50e9
+    assert hw.CHIPS_PER_POD == 256
