@@ -1,9 +1,30 @@
 """Kernel microbenchmarks (interpret-mode wall time is NOT a TPU number —
 these rows exist to track relative cost of the bit-plane path vs the dense
-reference on CPU and to exercise the jit'd wrappers end-to-end)."""
+reference on CPU and to exercise the jit'd wrappers end-to-end).
+
+Also writes BENCH_fused_matmul.json at the repo root: fused vs unfused
+serve-path wall time plus the HBM-bytes-moved model — the quantity the
+fusion actually optimizes (interpret wall time only proves both paths run;
+the bytes model is the TPU-relevant number).
+"""
 from __future__ import annotations
 
+import json
+from pathlib import Path
+
 from benchmarks.common import emit, timed
+
+
+def _hbm_bytes(m: int, k: int, n: int, a_bits: int, fused: bool) -> dict:
+    """HBM traffic model for one serve-path matmul (fp32 x, int8 codes,
+    int32 acc, fp32 scales; weights counted once as packed bytes)."""
+    x_in = m * k * 4
+    codes_roundtrip = 0 if fused else 2 * m * k  # int8 write + re-read
+    w_in = k * n  # int8 codes (precision-scaled packing tracked elsewhere)
+    out = m * n * 4 + m * 4
+    total = x_in + codes_roundtrip + w_in + out
+    return {"x_in": x_in, "codes_roundtrip": codes_roundtrip,
+            "w_in": w_in, "out": out, "total": total}
 
 
 def run() -> dict:
@@ -44,6 +65,46 @@ def run() -> dict:
     )
     emit("kernel/qmatmul_serve_w4a8/256x1024x512", us,
          f"packed_bytes={pw.hbm_bytes()} dense_bytes={wf.size*4}")
+
+    # --- fused vs unfused serve path ------------------------------------
+    fused_rows = []
+    for (m, k, n, ab) in [(128, 512, 256, 8), (256, 1024, 512, 4)]:
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int32)
+
+        def unfused():
+            q, s = ops.quantize_rows(x, bits=ab)
+            return jax.block_until_ready(
+                ops.bitplane_matmul(q, w, a_bits=ab))
+
+        def fused():
+            acc, s = ops.fused_quantize_matmul(x, w, a_bits=ab)
+            return jax.block_until_ready(acc)
+
+        _, us_u = timed(unfused, repeat=3)
+        _, us_f = timed(fused, repeat=3)
+        bytes_u = _hbm_bytes(m, k, n, ab, fused=False)
+        bytes_f = _hbm_bytes(m, k, n, ab, fused=True)
+        emit(f"kernel/serve_unfused/{m}x{k}x{n}_a{ab}", us_u,
+             f"hbm_bytes={bytes_u['total']}")
+        emit(f"kernel/serve_fused/{m}x{k}x{n}_a{ab}", us_f,
+             f"hbm_bytes={bytes_f['total']} "
+             f"saved={bytes_u['total'] - bytes_f['total']}")
+        fused_rows.append({
+            "shape": [m, k, n], "a_bits": ab,
+            "unfused_us": round(us_u, 2), "fused_us": round(us_f, 2),
+            "hbm_bytes_unfused": bytes_u, "hbm_bytes_fused": bytes_f,
+            "hbm_bytes_saved": bytes_u["total"] - bytes_f["total"],
+        })
+        results[f"fused_a{ab}"] = us_f
+
+    bench_path = Path(__file__).resolve().parents[1] / "BENCH_fused_matmul.json"
+    bench_path.write_text(json.dumps({
+        "note": ("interpret-mode wall time on CPU; the HBM-bytes model is "
+                 "the TPU-relevant metric (fused path eliminates the int8 "
+                 "activation-code round trip)"),
+        "rows": fused_rows,
+    }, indent=2) + "\n")
     return results
 
 

@@ -6,11 +6,19 @@ Layers:
   bitserial        : cycle-exact MAC2 / bit-serial dot semantics (the oracle)
   m4bram           : functional block model (modes, shuffler, instructions)
   quantized_linear : the technique as a drop-in matmul for the model zoo
+  precision        : per-layer PrecisionPolicy (policy → packed leaves)
   hetero           : BPE/DSP workload partitioning (Q_VEC split)
   simulate         : cycle-accurate DLA / Hetero-DLA / BRAMAC simulator
   dse              : tiling design-space exploration (perf × perf/area)
   workloads        : the paper's DNN benchmark layer tables
 """
+from repro.core.precision import (  # noqa: F401
+    LayerRule,
+    PrecisionPolicy,
+    parse_policy_spec,
+    parse_quant_token,
+    policy_from_dse,
+)
 from repro.core.quant import QuantConfig, fake_quant, quantize_tensor  # noqa: F401
 from repro.core.quantized_linear import (  # noqa: F401
     PackedWeight,

@@ -1,0 +1,201 @@
+"""Per-layer precision policies (the compile-time half of M4BRAM's
+mixed-precision configurability).
+
+The paper stores weight precision in per-layer configuration SRAM and takes
+activation precision from the CIM instruction — precision is a *per-layer*
+decision, not a global one (§IV; DeepBurning-MixQ and ILMPQ treat the same
+choice as a first-class compile-time knob). A :class:`PrecisionPolicy` is
+the software analogue: an ordered rule list mapping parameter-tree paths to
+:class:`~repro.core.quant.QuantConfig`, with a default for everything else.
+
+Policies flow end-to-end:
+
+  * ``quantize_params_for_serving(params, policy)`` packs each 2-D weight
+    with the config its path matches — the PackedWeight leaf records its
+    own ``(w_bits, a_bits, act_signed)``;
+  * ``QuantizedLinear.qmatmul`` reads the leaf-carried activation precision,
+    so a served model runs different ``(w_bits, a_bits)`` per layer with no
+    model-code changes;
+  * ``ServingEngine`` / ``launch/serve.py`` accept either a single
+    QuantConfig (uniform, the old behavior) or a policy spec string.
+
+Policies can be written by hand (:func:`parse_policy_spec`) or derived from
+the design-space exploration in :mod:`repro.core.dse` /
+:mod:`repro.core.hetero` (:func:`policy_from_dse`): per layer, pick the
+precision with the best simulated cycle count, protecting the boundary
+layers at 8-bit — the standard sensitivity guard the paper's fine-tuning
+setup also applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.quant import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerRule:
+    """First-match-wins rule: `pattern` is re.search'd against the
+    '/'-joined parameter path (e.g. "blocks/wq", "moe/w_up")."""
+
+    pattern: str
+    cfg: QuantConfig
+
+    def matches(self, path: str) -> bool:
+        return re.search(self.pattern, path) is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Ordered per-layer quantization rules + a default config."""
+
+    default: QuantConfig
+    rules: Tuple[LayerRule, ...] = ()
+
+    @classmethod
+    def uniform(cls, cfg: QuantConfig) -> "PrecisionPolicy":
+        """A policy equivalent to the old single global QuantConfig."""
+        return cls(default=cfg)
+
+    def for_path(self, path: str) -> QuantConfig:
+        """Config for one parameter path (first matching rule, else default)."""
+        for rule in self.rules:
+            if rule.matches(path):
+                return rule.cfg
+        return self.default
+
+    def with_rule(self, pattern: str, cfg: QuantConfig) -> "PrecisionPolicy":
+        """A new policy with `pattern → cfg` appended (lowest priority)."""
+        return dataclasses.replace(self, rules=self.rules + (LayerRule(pattern, cfg),))
+
+    def describe(self) -> str:
+        parts = [f"default={_fmt_cfg(self.default)}"]
+        parts += [f"{r.pattern}={_fmt_cfg(r.cfg)}" for r in self.rules]
+        return "; ".join(parts)
+
+
+def _fmt_cfg(cfg: QuantConfig) -> str:
+    s = f"w{cfg.w_bits}a{cfg.a_bits}"
+    if cfg.mixed_ratio_8b:
+        s += f"r{int(round(cfg.mixed_ratio_8b * 100))}"
+    return s
+
+
+def as_policy(
+    quant: Union[None, QuantConfig, PrecisionPolicy]
+) -> Optional[PrecisionPolicy]:
+    """Normalize the user-facing `quant` argument (None passes through)."""
+    if quant is None or isinstance(quant, PrecisionPolicy):
+        return quant
+    if isinstance(quant, QuantConfig):
+        return PrecisionPolicy.uniform(quant)
+    raise TypeError(f"expected QuantConfig or PrecisionPolicy, got {type(quant)!r}")
+
+
+_SPEC_RE = re.compile(r"w(\d)a(\d)(?:r(\d+))?")
+
+
+def parse_quant_token(token: str) -> QuantConfig:
+    """Parse one "wXaY[rZZ]" token (rZZ = ZZ% 8-bit filter group) — the
+    single grammar shared by --quant flags and policy specs."""
+    m = _SPEC_RE.fullmatch(token)
+    if not m:
+        raise ValueError(f"bad quant spec {token!r} (expected e.g. w4a8, w4a8r10)")
+    return QuantConfig(
+        w_bits=int(m.group(1)),
+        a_bits=int(m.group(2)),
+        mixed_ratio_8b=int(m.group(3)) / 100.0 if m.group(3) else 0.0,
+    )
+
+
+def parse_policy_spec(spec: str) -> PrecisionPolicy:
+    """Parse "w4a8;wo=w8a8;moe/w_up=w2a4r10" into a policy.
+
+    The first (or only) ';'-separated token without '=' is the default;
+    each `pattern=wXaY[rZZ]` token appends a rule in order.
+    """
+    default: Optional[QuantConfig] = None
+    rules: List[LayerRule] = []
+    for token in filter(None, (t.strip() for t in spec.split(";"))):
+        if "=" in token:
+            pattern, _, cfg_s = token.rpartition("=")
+            rules.append(LayerRule(pattern.strip(), parse_quant_token(cfg_s.strip())))
+        else:
+            if default is not None:
+                raise ValueError(f"duplicate default in policy spec {spec!r}")
+            default = parse_quant_token(token)
+    if default is None:
+        raise ValueError(f"policy spec {spec!r} has no default wXaY token")
+    return PrecisionPolicy(default=default, rules=tuple(rules))
+
+
+def policy_from_dse(
+    layers: Sequence,
+    fpga,
+    cim,
+    a_bits: int = 8,
+    w_candidates: Sequence[int] = (2, 4, 8),
+    protect_boundary: bool = True,
+    mixed_from_hetero: bool = False,
+) -> PrecisionPolicy:
+    """Derive a per-layer policy from the performance-model DSE.
+
+    For each candidate weight precision, run :func:`repro.core.dse.search`
+    to get that precision's best tiling, then pick per layer the precision
+    whose simulated cycle count is lowest. The first and last layers are
+    pinned to 8-bit when `protect_boundary` (the standard sensitivity
+    guard). With `mixed_from_hetero`, non-8-bit layers additionally carry a
+    Table-III 8-bit filter-group ratio balancing the two engine rates
+    (:func:`repro.core.hetero.balanced_group_ratio` on the BPE/DSP
+    throughputs implied by the chosen tile).
+
+    `layers` are :class:`repro.core.workloads.Layer`; rule patterns anchor
+    on each layer's name, so callers map workload layer names onto their
+    parameter-tree paths (the benchmark tables use matching names).
+    """
+    from repro.core import dse, hetero
+    from repro.core import simulate as sim
+
+    per_bits: Dict[int, Tuple[object, List[float]]] = {}
+    for pw in w_candidates:
+        try:
+            result = dse.search(list(layers), pw, a_bits, fpga, cim)
+        except RuntimeError:
+            continue  # no feasible tiling at this precision
+        cycles = []
+        for layer, ni in zip(layers, result.per_layer_ni):
+            tile = dataclasses.replace(result.tile, n_i=ni)
+            r = sim.simulate_layer(layer, tile, pw, a_bits, fpga, cim)
+            cycles.append(r.cycles)
+        per_bits[pw] = (result, cycles)
+    if not per_bits:
+        raise RuntimeError("policy_from_dse: no feasible precision candidate")
+
+    rules: List[LayerRule] = []
+    n_layers = len(layers)
+    for i, layer in enumerate(layers):
+        if protect_boundary and i in (0, n_layers - 1) and 8 in per_bits:
+            best_pw = 8
+        else:
+            best_pw = min(per_bits, key=lambda pw: per_bits[pw][1][i])
+        ratio = 0.0
+        if mixed_from_hetero and best_pw != 8 and cim is not None:
+            result, _ = per_bits[best_pw]
+            tile = result.tile
+            if tile.q_bpe > 0:
+                # BPE rate scales with lanes/latency; DSP side is bit-parallel.
+                bpe_rate = tile.q_bpe * cim.lanes(best_pw) / max(
+                    cim.mac2_cycles(a_bits), 1)
+                dsp_rate = float(max(tile.q_vec - tile.q_bpe, 0))
+                ratio = hetero.balanced_group_ratio(dsp_rate, bpe_rate)
+        cfg = QuantConfig(
+            w_bits=best_pw,
+            a_bits=a_bits,
+            mixed_ratio_8b=ratio if 0.0 < ratio < 1.0 else 0.0,
+        )
+        rules.append(LayerRule(rf"(^|/){re.escape(layer.name)}$", cfg))
+
+    default = QuantConfig(w_bits=max(w_candidates), a_bits=a_bits)
+    return PrecisionPolicy(default=default, rules=tuple(rules))

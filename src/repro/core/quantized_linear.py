@@ -41,6 +41,9 @@ class PackedWeight:
     n8     : Table III mixing — leading n8 output channels are 8-bit packed
              in `packed8` with scales in `scale` too. 0 disables mixing.
     packed8: optional int8 (K, n8) storage for the 8-bit group.
+    a_bits / act_signed : the activation precision this layer was packed
+             for — the leaf carries its own per-layer PrecisionPolicy
+             decision, so serve-time matmuls need no global QuantConfig.
     """
 
     packed: jax.Array
@@ -49,17 +52,20 @@ class PackedWeight:
     k: int
     n8: int = 0
     packed8: Optional[jax.Array] = None
+    a_bits: int = 8
+    act_signed: bool = True
 
     def tree_flatten(self):
         leaves = (self.packed, self.scale, self.packed8)
-        aux = (self.bits, self.k, self.n8)
+        aux = (self.bits, self.k, self.n8, self.a_bits, self.act_signed)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         packed, scale, packed8 = leaves
-        bits, k, n8 = aux
-        return cls(packed=packed, scale=scale, bits=bits, k=k, n8=n8, packed8=packed8)
+        bits, k, n8, a_bits, act_signed = aux
+        return cls(packed=packed, scale=scale, bits=bits, k=k, n8=n8,
+                   packed8=packed8, a_bits=a_bits, act_signed=act_signed)
 
     @property
     def shape(self):
@@ -78,17 +84,20 @@ def pack_weight(w: jax.Array, cfg: QuantConfig) -> PackedWeight:
         raise ValueError(f"pack_weight expects (K, N), got {w.shape}")
     k, n = w.shape
     w32 = w.astype(jnp.float32)
+    ab, asg = cfg.a_bits, cfg.act_signed
     if cfg.mixed_ratio_8b > 0.0 and cfg.w_bits != 8:
         q, s, n8 = quantize_weights_mixed(w32, cfg)
         if n8 == n:
-            return PackedWeight(q.astype(jnp.int8), s.reshape(1, n), 8, k, 0, None)
+            return PackedWeight(q.astype(jnp.int8), s.reshape(1, n), 8, k, 0,
+                                None, ab, asg)
         q8, ql = q[:, :n8], q[:, n8:]
         pk = bitplane.pack_weights(ql, cfg.w_bits, axis=0)
-        return PackedWeight(pk, s.reshape(1, n), cfg.w_bits, k, n8, q8.astype(jnp.int8))
+        return PackedWeight(pk, s.reshape(1, n), cfg.w_bits, k, n8,
+                            q8.astype(jnp.int8), ab, asg)
     q, s = quantize_tensor(w32, cfg.w_bits, True, axis=1 if cfg.per_channel else None)
     pk = bitplane.pack_weights(q, cfg.w_bits, axis=0)
     s = jnp.broadcast_to(jnp.asarray(s, jnp.float32).reshape(1, -1), (1, n))
-    return PackedWeight(pk, s, cfg.w_bits, k, 0, None)
+    return PackedWeight(pk, s, cfg.w_bits, k, 0, None, ab, asg)
 
 
 def unpack_weight(pw: PackedWeight) -> jax.Array:
@@ -130,17 +139,23 @@ def _serve_matmul(
 ) -> jax.Array:
     """Packed-weight matmul.
 
-    use_kernel=True — the Pallas bit-plane kernel (exact int path; the real
-    TPU implementation, validated in tests; interpret-mode on CPU so only
-    used outside distributed graphs).
+    Activation precision comes from `cfg` when given, else from the
+    PackedWeight leaf itself — which is how a per-layer PrecisionPolicy
+    reaches the kernel without the model threading configs around.
+
+    use_kernel=True — the fused quantize→bit-plane Pallas kernel (exact int
+    path; the real TPU implementation, validated in tests; interpret-mode
+    on CPU so only used outside distributed graphs). Activations are
+    quantized in the matmul's K-loop prologue; no int8 activation tensor
+    ever reaches HBM.
 
     use_kernel=False — the algebraically *identical* dequant formulation
     for jit/pjit graphs: (codes_x · s_x) @ (codes_w · s_w). XLA fuses the
     unpack+scale chain into the matmul on TPU, so HBM sees only packed
     bytes — the kernel contract the §Perf analysis accounts with.
     """
-    a_bits = cfg.a_bits if cfg is not None else 8
-    act_signed = cfg.act_signed if cfg is not None else True
+    a_bits = cfg.a_bits if cfg is not None else pw.a_bits
+    act_signed = cfg.act_signed if cfg is not None else pw.act_signed
     lead = x.shape[:-1]
     k = x.shape[-1]
     if k != pw.k:
@@ -149,12 +164,11 @@ def _serve_matmul(
     if use_kernel:
         from repro.kernels import ops as kops
 
-        xq, xscale = quantize_tensor(
-            x2.astype(jnp.float32), a_bits, act_signed, axis=0, optimal_clip=False
-        )  # per-row (per-token) scale
         wq = unpack_weight(pw)
-        acc = kops.bitplane_matmul(xq, wq, a_bits=a_bits, act_signed=act_signed)
-        y = acc.astype(jnp.float32) * xscale.reshape(-1, 1) * pw.scale
+        acc, xscale = kops.fused_quantize_matmul(
+            x2.astype(jnp.float32), wq, a_bits=a_bits, act_signed=act_signed
+        )  # per-row (per-token) scale
+        y = acc.astype(jnp.float32) * xscale * pw.scale
         return y.reshape(*lead, -1).astype(x.dtype)
     xq = fake_quant(x2, a_bits, act_signed)
     w = dequantize_weight(pw, dtype=xq.dtype)
@@ -166,9 +180,15 @@ _NO_PACK = ("embed", "head", "patch_proj", "frame_proj", "router", "u",
             "decay_base", "gn_scale", "gn_bias", "conv_w", "lambda_p")
 
 
-def quantize_params_for_serving(params, cfg: QuantConfig, min_size: int = 1 << 16):
+def quantize_params_for_serving(params, cfg, min_size: int = 1 << 16):
     """Walk a parameter pytree and replace 2-D linear weights with
     PackedWeight leaves (the serving transformation).
+
+    `cfg` is a single :class:`QuantConfig` (uniform precision, the paper's
+    per-network setting) or a :class:`~repro.core.precision.PrecisionPolicy`
+    mapping parameter paths to per-layer configs — each packed leaf records
+    the (w_bits, a_bits) its path matched, so a served model runs mixed
+    per-layer precision end-to-end.
 
     Exclusions (kept full-precision, matching the paper's treatment of
     non-GEMM layers): embeddings/heads (consumed by take/transpose paths),
@@ -177,7 +197,10 @@ def quantize_params_for_serving(params, cfg: QuantConfig, min_size: int = 1 << 1
     """
     import re
 
+    from repro.core.precision import as_policy
     from repro.parallel.sharding import tree_path_str
+
+    policy = as_policy(cfg)
 
     def maybe_pack(path, leaf):
         pstr = tree_path_str(path)
@@ -189,12 +212,13 @@ def quantize_params_for_serving(params, cfg: QuantConfig, min_size: int = 1 << 1
             or leaf.size < min_size
         ):
             return leaf
+        leaf_cfg = policy.for_path(pstr)
         if leaf.ndim == 2 and leaf.shape[0] % 16 == 0 and min(leaf.shape) >= 128:
             # min-dim guard: stacked norm scales (L, d) are 2-D but not GEMMs.
-            return pack_weight(leaf, cfg)
+            return pack_weight(leaf, leaf_cfg)
         if leaf.ndim == 3 and leaf.shape[1] % 16 == 0 and leaf.shape[2] >= 16:
             # Stacked scan-over-layers weights (L, K, N): pack per layer.
-            return jax.vmap(lambda w: pack_weight(w, cfg))(leaf)
+            return jax.vmap(lambda w: pack_weight(w, leaf_cfg))(leaf)
         return leaf
 
     return jax.tree_util.tree_map_with_path(maybe_pack, params)

@@ -2,12 +2,18 @@
 
   bitplane_matmul : mixed-precision matmul via 2-bit activation planes —
                     the BPE dataflow vectorized onto the MXU
-  pack_quant      : fused per-token activation quantization
+  fused_matmul    : fused quantize→bit-plane matmul (serve hot path; no
+                    intermediate int8 activation tensor in HBM)
+  pack_quant      : standalone per-token activation quantization
   wkv6            : RWKV-6 chunked linear-attention mixer
-  ops             : jit'd public wrappers + block-shape selection
-  ref             : pure-jnp oracles (the test specification)
+  registry        : backend dispatch (interpret/mosaic/reference) + memoized
+                    per-shape block-plan/autotune cache
+  ops             : jit'd public wrappers — the only entry point callers use
+  ref             : pure-jnp oracles (the test specification, also the
+                    "reference" backend)
 
 All kernels are written with pl.pallas_call + explicit BlockSpec VMEM tiling
 targeting TPU, and validated on CPU in interpret mode.
 """
 from repro.kernels import ops  # noqa: F401
+from repro.kernels.registry import get_registry, use_backend  # noqa: F401

@@ -37,20 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-try:  # TPU compiler params are optional in interpret mode
-    from jax.experimental.pallas import tpu as pltpu
-
-    def _compiler_params(dims):
-        try:
-            return pltpu.CompilerParams(dimension_semantics=dims)
-        except AttributeError:  # older naming
-            return pltpu.TPUCompilerParams(dimension_semantics=dims)
-
-except ImportError:  # pragma: no cover
-    pltpu = None
-
-    def _compiler_params(dims):
-        return None
+from repro.kernels.common import compiler_params as _compiler_params
+from repro.kernels.common import round_up as _round_up
 
 
 def _bitplane_matmul_kernel(
@@ -124,9 +112,12 @@ def bitplane_matmul(
     if k != k2:
         raise ValueError(f"contraction mismatch {k} vs {k2}")
 
+    # Clamp blocks to the padded problem without dropping the alignment the
+    # caller's plan carries: a 128-multiple block (MXU lane contract, mosaic
+    # plans) stays a 128-multiple; finer interpret-mode plans clamp to 8.
     bm_ = min(bm, _round_up(m, 8))
-    bn_ = min(bn, _round_up(n, 128))
-    bk_ = min(bk, _round_up(k, 128))
+    bn_ = min(bn, _round_up(n, 128 if bn % 128 == 0 else 8))
+    bk_ = min(bk, _round_up(k, 128 if bk % 128 == 0 else 8))
     mp, np_, kp = _round_up(m, bm_), _round_up(n, bn_), _round_up(k, bk_)
 
     x = jnp.zeros((mp, kp), jnp.int8).at[:m, :k].set(x_codes.astype(jnp.int8))
@@ -152,7 +143,3 @@ def bitplane_matmul(
         interpret=interpret,
     )(x, w)
     return out[:m, :n]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return -(-x // mult) * mult

@@ -1,0 +1,27 @@
+"""Helpers shared by every Pallas kernel in this package.
+
+Single home for the rounding/padding arithmetic and the TPU compiler-params
+shim that ``bitplane_matmul``, ``pack_quant``, ``fused_matmul``,
+``flash_attention`` and ``wkv6`` previously each re-declared.
+"""
+from __future__ import annotations
+
+try:  # TPU compiler params are optional in interpret mode
+    from jax.experimental.pallas import tpu as pltpu
+
+    def compiler_params(dims):
+        try:
+            return pltpu.CompilerParams(dimension_semantics=dims)
+        except AttributeError:  # older naming
+            return pltpu.TPUCompilerParams(dimension_semantics=dims)
+
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+    def compiler_params(dims):
+        return None
+
+
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of `mult` that is >= x."""
+    return -(-x // mult) * mult

@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bitplane_matmul import _compiler_params, _round_up
+from repro.kernels.common import compiler_params as _compiler_params
+from repro.kernels.common import round_up as _round_up
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,

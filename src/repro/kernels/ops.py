@@ -2,14 +2,20 @@
 
 This module is the only kernel entry point the rest of the framework uses.
 It owns:
-  * interpret-vs-compiled dispatch (CPU containers run interpret=True;
-    on TPU `set_interpret(False)` switches to Mosaic lowering),
-  * block-shape selection per operand shape (VMEM budgeting),
-  * the packed/mixed-group compositions used by QuantizedLinear.
+  * backend dispatch through :mod:`repro.kernels.registry` — every op takes
+    an optional ``backend=`` ("interpret" | "mosaic" | "reference") and
+    otherwise uses the registry's active backend (platform default: Mosaic
+    on TPU, interpret elsewhere),
+  * block-shape selection per operand shape (VMEM budgeting, memoized in
+    the registry's plan cache),
+  * the packed/mixed-group compositions used by QuantizedLinear — the
+    serve path runs the *fused* quantize→bit-plane kernel so activations
+    never round-trip through HBM as int8 codes.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -17,35 +23,38 @@ import jax.numpy as jnp
 
 from repro.core import bitplane
 from repro.kernels import bitplane_matmul as _bpm
+from repro.kernels import fused_matmul as _fused
 from repro.kernels import pack_quant as _pq
+from repro.kernels import ref as _ref
 from repro.kernels import wkv6 as _wkv6
-
-_INTERPRET = True  # CPU container default; flipped on real TPU.
+from repro.kernels.registry import KernelBackend, get_registry, use_backend  # noqa: F401
 
 
 def set_interpret(value: bool) -> None:
-    global _INTERPRET
-    _INTERPRET = bool(value)
+    """Deprecated shim over the kernel registry.
 
-
-def pick_matmul_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
-    """Choose (bm, bn, bk) fitting a ~4 MiB VMEM working-set budget.
-
-    x tile: bm*bk int8; w tile: bk*bn int8; acc: bm*bn int32 (+ Pallas
-    double-buffers the input tiles). MXU wants M/N tiles at multiples of
-    128 and the int8 K lane at multiples of 256 where possible.
+    Use ``get_registry().set_active("interpret"|"mosaic")`` or the scoped
+    ``use_backend(...)`` context manager instead.
     """
-    bm = 128 if m >= 128 else max(8, _ru(m, 8))
-    bn = 128 if n >= 128 else max(128, _ru(n, 128))
-    bk = 512 if k >= 512 else max(128, _ru(k, 128))
-    # Shrink bk until 2*(bm*bk + bk*bn) + 4*bm*bn <= 4 MiB
-    while 2 * (bm * bk + bk * bn) + 4 * bm * bn > (4 << 20) and bk > 128:
-        bk //= 2
-    return bm, bn, bk
+    warnings.warn(
+        "set_interpret is deprecated; select a backend through "
+        "repro.kernels.registry (get_registry().set_active / use_backend)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    get_registry().set_active("interpret" if value else "mosaic")
 
 
-def _ru(x: int, mult: int) -> int:
-    return -(-x // mult) * mult
+def pick_matmul_blocks(
+    m: int, n: int, k: int, backend: Optional[str] = None
+) -> Tuple[int, int, int]:
+    """Memoized (bm, bn, bk) for shape (m, n, k) on the given/active backend.
+
+    Large shapes take MXU tiles fitting the ~4 MiB VMEM working-set budget;
+    small shapes round up only to the backend's alignment (interpret mode
+    tiles at 8, so tiny layers no longer pad N/K up to 128).
+    """
+    return get_registry().matmul_plan(m, n, k, backend)
 
 
 def bitplane_matmul(
@@ -56,11 +65,15 @@ def bitplane_matmul(
     act_signed: bool = True,
     plane_bits: int = 2,
     blocks: Optional[Tuple[int, int, int]] = None,
+    backend=None,
 ) -> jax.Array:
     """Exact int matmul of activation codes × weight codes via bit planes."""
+    be = get_registry().resolve(backend)
+    if be.is_reference:
+        return _ref.bitplane_matmul_ref(x_codes, w_codes, a_bits, act_signed)
     m, k = x_codes.shape
     n = w_codes.shape[1]
-    bm, bn, bk = blocks or pick_matmul_blocks(m, n, k)
+    bm, bn, bk = blocks or get_registry().matmul_plan(m, n, k, be)
     return _bpm.bitplane_matmul(
         x_codes,
         w_codes,
@@ -70,13 +83,54 @@ def bitplane_matmul(
         bm=bm,
         bn=bn,
         bk=bk,
-        interpret=_INTERPRET,
+        interpret=be.interpret,
     )
 
 
-def quantize_rows(x: jax.Array, *, bits: int = 8, signed: bool = True):
+def quantize_rows(x: jax.Array, *, bits: int = 8, signed: bool = True,
+                  backend=None):
     """Fused per-row (per-token) quantization: (M, K) float → int8 codes + scales."""
-    return _pq.quantize_rows(x, bits=bits, signed=signed, interpret=_INTERPRET)
+    be = get_registry().resolve(backend)
+    if be.is_reference:
+        return _ref.quantize_pack_ref(x.astype(jnp.float32), bits, signed=signed)
+    return _pq.quantize_rows(x, bits=bits, signed=signed, interpret=be.interpret)
+
+
+def fused_quantize_matmul(
+    x: jax.Array,
+    w_codes: jax.Array,
+    *,
+    a_bits: int = 8,
+    act_signed: bool = True,
+    plane_bits: int = 2,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    backend=None,
+):
+    """(M, K) float × (K, N) int codes → ((M, N) int32, (M, 1) fp32 scales).
+
+    One kernel: per-row quantization happens in the matmul's K-loop prologue
+    with the fp32 rows resident in VMEM — no intermediate int8 activation
+    tensor in HBM. Bit-identical to ``quantize_rows → bitplane_matmul``.
+    """
+    be = get_registry().resolve(backend)
+    if be.is_reference:
+        q, s = _ref.quantize_pack_ref(x.astype(jnp.float32), a_bits,
+                                      signed=act_signed)
+        return _ref.bitplane_matmul_ref(q, w_codes, a_bits, act_signed), s
+    m, k = x.shape
+    n = w_codes.shape[1]
+    bm, bn, bk = blocks or get_registry().fused_matmul_plan(m, n, k, be)
+    return _fused.fused_quantize_matmul(
+        x,
+        w_codes,
+        a_bits=a_bits,
+        act_signed=act_signed,
+        plane_bits=plane_bits,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        interpret=be.interpret,
+    )
 
 
 def packed_matmul(
@@ -87,16 +141,20 @@ def packed_matmul(
     w_bits: int,
     a_bits: int = 8,
     act_signed: bool = True,
+    backend=None,
 ) -> jax.Array:
     """float x (M, K) × packed sub-byte weights ((K·bits/8), N) → float (M, N).
 
-    The end-to-end M4BRAM serving path: quantize activations (kernel),
-    unpack weights (VMEM-side layout op), bit-plane matmul (kernel),
-    dequantize with per-token × per-channel scales.
+    The end-to-end M4BRAM serving path: unpack weights (VMEM-side layout
+    op), then the *fused* quantize→bit-plane kernel (activations quantized
+    in the matmul prologue), then dequantize with per-token × per-channel
+    scales.
     """
-    xq, xs = quantize_rows(x.astype(jnp.float32), bits=a_bits, signed=act_signed)
     wq = bitplane.unpack_weights(packed, w_bits, axis=0)
-    acc = bitplane_matmul(xq, wq, a_bits=a_bits, act_signed=act_signed)
+    acc, xs = fused_quantize_matmul(
+        x.astype(jnp.float32), wq, a_bits=a_bits, act_signed=act_signed,
+        backend=backend,
+    )
     return (acc.astype(jnp.float32) * xs * scale.reshape(1, -1)).astype(x.dtype)
 
 
@@ -109,18 +167,22 @@ def mixed_group_matmul(
     *,
     w_bits: int,
     a_bits: int = 8,
+    backend=None,
 ) -> jax.Array:
     """Intra-layer mixed 8b/low-bit group matmul (paper Table III).
 
     The activation quantization is shared between the groups (one kernel
-    pass), then each filter group runs its own bit-plane matmul — the two
-    groups are the TPU analogue of the paper's BPE/DSP heterogeneous split,
-    and XLA schedules them back-to-back on the MXU with no interlock.
+    pass — which is why this path stays unfused), then each filter group
+    runs its own bit-plane matmul — the two groups are the TPU analogue of
+    the paper's BPE/DSP heterogeneous split, and XLA schedules them
+    back-to-back on the MXU with no interlock.
     """
-    xq, xs = quantize_rows(x.astype(jnp.float32), bits=a_bits, signed=True)
-    acc8 = bitplane_matmul(xq, w8_codes.astype(jnp.int32), a_bits=a_bits)
+    xq, xs = quantize_rows(x.astype(jnp.float32), bits=a_bits, signed=True,
+                           backend=backend)
+    acc8 = bitplane_matmul(xq, w8_codes.astype(jnp.int32), a_bits=a_bits,
+                           backend=backend)
     wl = bitplane.unpack_weights(wl_packed, w_bits, axis=0)
-    accl = bitplane_matmul(xq, wl, a_bits=a_bits)
+    accl = bitplane_matmul(xq, wl, a_bits=a_bits, backend=backend)
     y8 = acc8.astype(jnp.float32) * xs * scale8.reshape(1, -1)
     yl = accl.astype(jnp.float32) * xs * scalel.reshape(1, -1)
     return jnp.concatenate([y8, yl], axis=1).astype(x.dtype)
@@ -136,30 +198,38 @@ def flash_attention(
     q_offset: int = 0,
     bq: int = 128,
     bk: int = 128,
+    backend=None,
 ) -> jax.Array:
     """GQA-aware flash attention: kv heads are broadcast to the q-head
     grid, heads fold into the batch grid dim. Returns (B, T, NQ, H)."""
-    from repro.kernels import flash_attention as _fa
-
+    be = get_registry().resolve(backend)
     B, T, NQ, H = q.shape
     NKV = k.shape[2]
     G = NQ // NKV
     qf = q.transpose(0, 2, 1, 3).reshape(B * NQ, T, H)
     kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * NQ, -1, H)
     vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * NQ, -1, H)
-    out = _fa.flash_attention(
-        qf, kf, vf, causal=causal, window=window, q_offset=q_offset,
-        bq=bq, bk=bk, interpret=_INTERPRET,
-    )
+    if be.is_reference:
+        out = _ref.flash_attention_ref(qf, kf, vf, causal, window, q_offset)
+    else:
+        from repro.kernels import flash_attention as _fa
+
+        out = _fa.flash_attention(
+            qf, kf, vf, causal=causal, window=window, q_offset=q_offset,
+            bq=bq, bk=bk, interpret=be.interpret,
+        )
     return out.reshape(B, NQ, T, H).transpose(0, 2, 1, 3).astype(q.dtype)
 
 
-def wkv6(r, k, v, w, u, *, chunk: int = 32) -> jax.Array:
+def wkv6(r, k, v, w, u, *, chunk: int = 32, backend=None) -> jax.Array:
     """Chunked RWKV-6 mixer. See repro/kernels/wkv6.py."""
-    return _wkv6.wkv6(r, k, v, w, u, chunk=chunk, interpret=_INTERPRET)
+    be = get_registry().resolve(backend)
+    if be.is_reference:
+        return _ref.wkv6_ref(r, k, v, w, u)
+    return _wkv6.wkv6(r, k, v, w, u, chunk=chunk, interpret=be.interpret)
 
 
-def wkv6_batched(r, k, v, w, u, *, chunk: int = 32) -> jax.Array:
+def wkv6_batched(r, k, v, w, u, *, chunk: int = 32, backend=None) -> jax.Array:
     """vmapped-over-batch wkv6: r/k/w (B, T, H, K), v (B, T, H, V)."""
-    fn = functools.partial(wkv6, chunk=chunk)
+    fn = functools.partial(wkv6, chunk=chunk, backend=backend)
     return jax.vmap(lambda a, b, c, d: fn(a, b, c, d, u))(r, k, v, w)

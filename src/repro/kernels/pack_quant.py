@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bitplane_matmul import _compiler_params, _round_up
+from repro.kernels.common import compiler_params as _compiler_params
+from repro.kernels.common import round_up as _round_up
 
 
 def _quantize_rows_kernel(x_ref, q_ref, s_ref, *, bits: int, signed: bool):
@@ -29,7 +30,10 @@ def _quantize_rows_kernel(x_ref, q_ref, s_ref, *, bits: int, signed: bool):
     scale = absmax / qhi
     inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
     q = jnp.clip(jnp.round(x * inv), qlo, qhi)
-    q_ref[...] = q.astype(jnp.int8)
+    # int32 hop: float→int8 saturates (255 → 127, corrupting unsigned 8-bit
+    # codes) while int32→int8 wraps, storing the code's bit pattern exactly —
+    # the bit-plane matmul reconstructs it mod 2^bits.
+    q_ref[...] = q.astype(jnp.int32).astype(jnp.int8)
     s_ref[...] = scale
 
 

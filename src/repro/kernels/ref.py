@@ -6,6 +6,8 @@ assert_allclose / exact integer equality).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -18,19 +20,33 @@ def bitplane_matmul_ref(
     a_bits: int,
     act_signed: bool = True,
 ) -> jax.Array:
-    """(M, K) int codes × (K, N) int codes → (M, N) int32, exact."""
-    return (x_codes.astype(jnp.int32) @ w_codes.astype(jnp.int32)).astype(jnp.int32)
+    """(M, K) int codes × (K, N) int codes → (M, N) int32, exact.
+
+    Unsigned codes may arrive as wrapped int8 storage (255 → -1); mask to
+    the a_bits range so the semantics match the kernels' offset-binary
+    reconstruction mod 2^a_bits.
+    """
+    x = x_codes.astype(jnp.int32)
+    if not act_signed:
+        x = x & ((1 << a_bits) - 1)
+    return (x @ w_codes.astype(jnp.int32)).astype(jnp.int32)
 
 
-def quantize_pack_ref(x: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+@functools.partial(jax.jit, static_argnames=("bits", "signed"))
+def quantize_pack_ref(
+    x: jax.Array, bits: int, signed: bool = True
+) -> tuple[jax.Array, jax.Array]:
     """Per-row absmax symmetric quantization of (M, K) float x to `bits`-bit
     codes, returned as int8 codes (unpacked; packing is layout-only) and
     per-row scales (M, 1)."""
-    qhi = (1 << (bits - 1)) - 1
+    qhi = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    qlo = -(1 << (bits - 1)) if signed else 0
     absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
     scale = absmax / qhi
     inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
-    q = jnp.clip(jnp.round(x * inv), -qhi - 1, qhi).astype(jnp.int8)
+    # int32 hop: float→int8 saturates but int32→int8 wraps, preserving the
+    # bit pattern of unsigned 8-bit codes (see pack_quant).
+    q = jnp.clip(jnp.round(x * inv), qlo, qhi).astype(jnp.int32).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 
 

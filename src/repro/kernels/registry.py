@@ -1,0 +1,327 @@
+"""Kernel backend dispatch registry.
+
+Replaces the old mutable module-global ``ops._INTERPRET`` flag with an
+explicit, inspectable abstraction. Three backends ship by default:
+
+  interpret : Pallas interpret mode — runs anywhere (CPU containers, tests).
+              Block planning may use sub-128 tiles since no MXU lane
+              constraint applies; tiny layers stop over-padding to 128.
+  mosaic    : Pallas → Mosaic lowering for real TPUs. Block plans keep the
+              MXU alignment contract (N/K tiles at multiples of 128).
+  reference : the pure-jnp oracles in :mod:`repro.kernels.ref` — no Pallas
+              at all. Useful inside distributed jit graphs and as the
+              always-correct fallback for new hardware bring-up.
+
+The registry also owns per-shape block-plan selection with a memoized
+autotune cache: :meth:`KernelRegistry.matmul_plan` answers "what (bm, bn, bk)
+should shape (M, N, K) use on this backend" from a heuristic VMEM model, and
+:meth:`KernelRegistry.autotune` lets benchmarks measure candidate plans once
+and pin the winner for every later call with the same shape.
+
+Backend selection is scoped, not global-mutable-state:
+
+    reg = get_registry()
+    with reg.use("reference"):
+        y = ops.bitplane_matmul(xq, wq, a_bits=4)
+
+or per-call via the ``backend=`` argument every op in
+:mod:`repro.kernels.ops` accepts.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple, Union
+
+from repro.kernels.common import round_up
+
+Blocks = Tuple[int, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """One way of executing the kernel suite.
+
+    Attributes:
+      name: registry key ("interpret" | "mosaic" | "reference" | custom).
+      interpret: value passed to ``pl.pallas_call(interpret=...)``.
+      is_reference: route to the pure-jnp oracles instead of Pallas.
+      m_align/n_align/k_align: block-shape alignment the backend requires.
+        Mosaic needs 128-lane N/K tiles for the MXU; interpret/reference
+        can tile at the fp32 sublane granularity (8) and avoid padding
+        tiny layers up to 128.
+    """
+
+    name: str
+    interpret: bool = True
+    is_reference: bool = False
+    m_align: int = 8
+    n_align: int = 128
+    k_align: int = 128
+
+
+_DEFAULT_BACKENDS = (
+    KernelBackend("interpret", interpret=True, n_align=8, k_align=8),
+    KernelBackend("mosaic", interpret=False, n_align=128, k_align=128),
+    KernelBackend("reference", interpret=True, is_reference=True,
+                  n_align=8, k_align=8),
+)
+
+# VMEM working-set budgets (bytes). The int8 path double-buffers two input
+# tiles; the fused path keeps full fp32 activation rows resident so it gets
+# a larger slice of the ~16 MiB/core VMEM.
+MATMUL_VMEM_BUDGET = 4 << 20
+FUSED_VMEM_BUDGET = 8 << 20
+
+
+def pick_matmul_blocks(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    m_align: int = 8,
+    n_align: int = 128,
+    k_align: int = 128,
+    vmem_budget: int = MATMUL_VMEM_BUDGET,
+) -> Blocks:
+    """Choose (bm, bn, bk) for the int8 bit-plane matmul.
+
+    x tile: bm*bk int8; w tile: bk*bn int8; acc: bm*bn int32 (+ Pallas
+    double-buffers the input tiles). Large shapes take MXU-shaped tiles
+    (128 on M/N, 512 on K); small shapes round up only to the backend's
+    alignment so a (3, 100, 5) matmul no longer pads to (8, 128, 128).
+    """
+    bm = 128 if m >= 128 else max(m_align, round_up(m, m_align))
+    bn = 128 if n >= 128 else min(128, max(n_align, round_up(n, n_align)))
+    bk = 512 if k >= 512 else min(512, max(k_align, round_up(k, k_align)))
+    while 2 * (bm * bk + bk * bn) + 4 * bm * bn > vmem_budget and bk > k_align:
+        bk = max(k_align, bk // 2)
+    return bm, bn, bk
+
+
+def pick_fused_blocks(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    m_align: int = 8,
+    n_align: int = 128,
+    k_align: int = 128,
+    vmem_budget: int = FUSED_VMEM_BUDGET,
+) -> Blocks:
+    """Blocks for the fused quantize→matmul kernel.
+
+    The fused kernel keeps a (bm, K) fp32 activation block fully resident
+    (the row absmax needs whole rows), so bm shrinks as K grows instead of
+    tiling K on the activation side; bk only tiles the weight operand.
+    """
+    kp = max(k_align, round_up(k, k_align))
+    bn = 128 if n >= 128 else min(128, max(n_align, round_up(n, n_align)))
+    bk = 512 if k >= 512 else kp
+    bm = 128 if m >= 128 else max(m_align, round_up(m, m_align))
+    # 4B fp32 rows double-buffered + int8 w tile double-buffered + int32 acc.
+    while bm > m_align and 8 * bm * kp + 2 * bk * bn + 4 * bm * bn > vmem_budget:
+        bm = max(m_align, bm // 2)
+    while 2 * bk * bn > vmem_budget // 4 and bk > k_align:
+        bk = max(k_align, bk // 2)
+    return bm, bn, bk
+
+
+_PLANNERS: Dict[str, Callable[..., Blocks]] = {
+    "bitplane_matmul": pick_matmul_blocks,
+    "fused_matmul": pick_fused_blocks,
+}
+
+
+class KernelRegistry:
+    """Backend registry + memoized per-shape block-plan cache."""
+
+    def __init__(self, backends: Iterable[KernelBackend] = _DEFAULT_BACKENDS):
+        self._backends: Dict[str, KernelBackend] = {}
+        for b in backends:
+            self.register(b)
+        self._active: Optional[str] = None
+        self._plans: Dict[Tuple[str, str, Blocks], Blocks] = {}
+        self._plan_hits = 0
+        self._plan_misses = 0
+
+    # -- backends ----------------------------------------------------------
+
+    def register(self, backend: KernelBackend, overwrite: bool = False) -> None:
+        if backend.name in self._backends and not overwrite:
+            raise ValueError(f"backend {backend.name!r} already registered")
+        self._backends[backend.name] = backend
+
+    def get(self, name: str) -> KernelBackend:
+        try:
+            return self._backends[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown kernel backend {name!r}; registered: {self.names()}"
+            ) from None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._backends)
+
+    def default_name(self) -> str:
+        """Platform default: Mosaic on real TPUs, interpret elsewhere."""
+        import jax
+
+        return "mosaic" if jax.default_backend() == "tpu" else "interpret"
+
+    @property
+    def active(self) -> KernelBackend:
+        return self.get(self._active or self.default_name())
+
+    def set_active(self, name: str) -> None:
+        self.get(name)  # validate
+        self._active = name
+
+    @contextlib.contextmanager
+    def use(self, name: str):
+        """Scoped backend selection (restores the previous choice on exit)."""
+        prev = self._active
+        self.set_active(name)
+        try:
+            yield self.get(name)
+        finally:
+            self._active = prev
+
+    def resolve(self, backend: Union[None, str, KernelBackend]) -> KernelBackend:
+        if backend is None:
+            return self.active
+        if isinstance(backend, KernelBackend):
+            return backend
+        return self.get(backend)
+
+    # -- block plans -------------------------------------------------------
+
+    def plan(
+        self,
+        op: str,
+        m: int,
+        n: int,
+        k: int,
+        backend: Union[None, str, KernelBackend] = None,
+    ) -> Blocks:
+        """Memoized (bm, bn, bk) for `op` at shape (m, n, k) on `backend`."""
+        be = self.resolve(backend)
+        key = (op, be.name, (m, n, k))
+        hit = self._plans.get(key)
+        if hit is not None:
+            self._plan_hits += 1
+            return hit
+        self._plan_misses += 1
+        try:
+            planner = _PLANNERS[op]
+        except KeyError:
+            raise KeyError(f"no block planner for op {op!r}") from None
+        blocks = planner(
+            m, n, k, m_align=be.m_align, n_align=be.n_align, k_align=be.k_align
+        )
+        self._plans[key] = blocks
+        return blocks
+
+    def matmul_plan(self, m, n, k, backend=None) -> Blocks:
+        return self.plan("bitplane_matmul", m, n, k, backend)
+
+    def fused_matmul_plan(self, m, n, k, backend=None) -> Blocks:
+        return self.plan("fused_matmul", m, n, k, backend)
+
+    def record_plan(
+        self, op: str, m: int, n: int, k: int, blocks: Blocks, backend=None
+    ) -> None:
+        """Pin an explicit plan (autotune winners land here)."""
+        be = self.resolve(backend)
+        self._plans[(op, be.name, (m, n, k))] = tuple(blocks)
+
+    def autotune(
+        self,
+        op: str,
+        m: int,
+        n: int,
+        k: int,
+        run: Callable[[Blocks], None],
+        candidates: Optional[Sequence[Blocks]] = None,
+        backend=None,
+        repeat: int = 2,
+    ) -> Blocks:
+        """Measure candidate block plans and memoize the fastest.
+
+        `run(blocks)` must execute the kernel to completion (block_until_ready)
+        for one candidate. Already-tuned shapes return the cached winner
+        without re-measuring. Failing candidates are skipped; the heuristic
+        plan is always included so autotune can only improve on it.
+        """
+        be = self.resolve(backend)
+        key = (op, be.name, (m, n, k))
+        cached = self._plans.get(key)
+        if cached is not None:
+            return cached
+        heur = _PLANNERS[op](
+            m, n, k, m_align=be.m_align, n_align=be.n_align, k_align=be.k_align
+        )
+        cands = list(candidates) if candidates else self._default_candidates(heur, m, n, k, be)
+        if heur not in cands:
+            cands.insert(0, heur)
+        best: Optional[Tuple[float, Blocks]] = None
+        for cand in cands:
+            try:
+                run(cand)  # warmup / compile outside the timed region
+                t = min(
+                    self._time_one(run, cand) for _ in range(max(1, repeat))
+                )
+            except Exception:
+                continue
+            if best is None or t < best[0]:
+                best = (t, cand)
+        if best is None:
+            raise RuntimeError(f"autotune: no candidate ran for {op} {m}x{n}x{k}")
+        self._plans[key] = best[1]
+        return best[1]
+
+    @staticmethod
+    def _time_one(run: Callable[[Blocks], None], cand: Blocks) -> float:
+        t0 = time.perf_counter()
+        run(cand)
+        return time.perf_counter() - t0
+
+    @staticmethod
+    def _default_candidates(heur: Blocks, m, n, k, be: KernelBackend):
+        bm, bn, bk = heur
+        cands = []
+        for fm in (1, 2):
+            for fk in (1, 2, 4):
+                c = (
+                    max(be.m_align, min(round_up(m, be.m_align), bm * fm)),
+                    bn,
+                    max(be.k_align, min(round_up(k, be.k_align), bk * fk)),
+                )
+                if c not in cands:
+                    cands.append(c)
+        return cands
+
+    def cache_info(self) -> dict:
+        return {
+            "plans": len(self._plans),
+            "hits": self._plan_hits,
+            "misses": self._plan_misses,
+        }
+
+    def clear_plans(self) -> None:
+        self._plans.clear()
+        self._plan_hits = self._plan_misses = 0
+
+
+_REGISTRY = KernelRegistry()
+
+
+def get_registry() -> KernelRegistry:
+    """The process-wide registry every public op dispatches through."""
+    return _REGISTRY
+
+
+def use_backend(name: str):
+    """Convenience: ``with use_backend("reference"): ...``"""
+    return _REGISTRY.use(name)

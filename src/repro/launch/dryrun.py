@@ -41,19 +41,15 @@ from repro.train.loop import TrainState, make_train_step
 
 
 def _parse_quant(s: str):
+    """e.g. w4a8, w2a4, w8a8, w4a8r10 (r10 = 10% 8-bit filter group).
+
+    One grammar for quant tokens everywhere: delegates to the policy
+    module's parser (a bare token is just a uniform policy's default)."""
     if not s or s == "none":
         return None
-    # e.g. w4a8, w2a4, w8a8, w4a8r10 (r10 = 10% 8-bit filter group)
-    import re
+    from repro.core.precision import parse_quant_token
 
-    m = re.fullmatch(r"w(\d)a(\d)(?:r(\d+))?", s)
-    if not m:
-        raise ValueError(f"bad quant spec {s!r}")
-    return QuantConfig(
-        w_bits=int(m.group(1)),
-        a_bits=int(m.group(2)),
-        mixed_ratio_8b=int(m.group(3)) / 100.0 if m.group(3) else 0.0,
-    )
+    return parse_quant_token(s)
 
 
 def _parse_overrides(items):

@@ -2,7 +2,13 @@
 of synthetic requests through the quantized engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
-      [--quant w4a8] [--kv-int8] [--ckpt /tmp/ckpt] [--requests 8]
+      [--quant w4a8] [--policy "w4a8;wo=w8a8;head=w8a8"] [--backend interpret] \
+      [--kv-int8] [--ckpt /tmp/ckpt] [--requests 8]
+
+--quant applies one uniform QuantConfig; --policy is a per-layer
+PrecisionPolicy spec ("default;pattern=wXaY[rZZ];..." matched against
+parameter paths). --backend selects the kernel backend through the
+registry (interpret | mosaic | reference; default = platform default).
 """
 import argparse
 
@@ -15,12 +21,23 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant", default=None)
+    ap.add_argument("--policy", default=None,
+                    help="per-layer precision spec, e.g. 'w4a8;wo=w8a8'")
+    ap.add_argument("--backend", default=None,
+                    choices=("interpret", "mosaic", "reference"))
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     args = ap.parse_args()
+
+    if args.quant and args.policy:
+        raise SystemExit("--quant and --policy are mutually exclusive")
+    if args.backend:
+        from repro.kernels import get_registry
+
+        get_registry().set_active(args.backend)
 
     import dataclasses
 
@@ -51,7 +68,12 @@ def main():
         print("serving randomly initialized weights (no --ckpt)")
 
     quant = None
-    if args.quant:
+    if args.policy:
+        from repro.core.precision import parse_policy_spec
+
+        quant = parse_policy_spec(args.policy)
+        print(f"precision policy: {quant.describe()}")
+    elif args.quant:
         from repro.launch.dryrun import _parse_quant
 
         quant = _parse_quant(args.quant)
@@ -71,7 +93,7 @@ def main():
     total = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {total} tokens, {dt:.1f}s "
           f"({total/dt:.1f} tok/s incl. compile) "
-          f"quant={args.quant or 'off'} kv_int8={args.kv_int8}")
+          f"quant={args.policy or args.quant or 'off'} kv_int8={args.kv_int8}")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:10]}")
 

@@ -37,10 +37,15 @@ def linear(
     quant: Optional[QuantConfig] = None,
     quant_mode: str = "none",
 ) -> jax.Array:
-    """All model matmuls route through the paper's technique."""
+    """All model matmuls route through the paper's technique.
+
+    PackedWeight leaves carry their own per-layer (w_bits, a_bits) from the
+    PrecisionPolicy they were packed under, so they always dispatch with
+    cfg=None — a global QuantConfig must not override a per-layer decision.
+    """
+    if hasattr(w, "packed"):  # PackedWeight: leaf-carried precision wins
+        return qmatmul(x, w, None)
     if quant is None or quant_mode == "none":
-        if hasattr(w, "packed"):  # PackedWeight arrives even without cfg
-            return qmatmul(x, w, None)
         return x @ w.astype(x.dtype)
     return qmatmul(x, w, quant, mode=quant_mode)
 

@@ -6,7 +6,10 @@ The engine owns:
   * one jitted prefill per bucketed prompt length + one jitted decode step,
   * optional serving-time weight quantization (PackedWeight params) — the
     paper's technique as deployed: weights live packed in HBM and every
-    matmul runs the bit-plane path, cutting weight bytes by 8/w_bits×,
+    matmul runs the bit-plane path, cutting weight bytes by 8/w_bits×.
+    `quant` takes either a single QuantConfig (uniform precision) or a
+    per-layer PrecisionPolicy (repro.core.precision) so different layers
+    serve at different (w_bits, a_bits),
   * simple greedy / temperature sampling.
 
 Decode batches one token across all live sequences per step (static batch,
@@ -16,13 +19,14 @@ step has one compiled signature.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy, as_policy
 from repro.core.quant import QuantConfig
 from repro.core.quantized_linear import quantize_params_for_serving
 from repro.models import build_model
@@ -43,14 +47,16 @@ class ServingEngine:
         cfg: ModelConfig,
         params,
         max_batch: int = 8,
-        quant: Optional[QuantConfig] = None,
+        quant: Union[None, QuantConfig, PrecisionPolicy] = None,
         bucket: int = 64,
         seed: int = 0,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
-        if quant is not None:
-            params = quantize_params_for_serving(params, quant, min_size=1024)
+        self.policy = as_policy(quant)
+        if self.policy is not None:
+            params = quantize_params_for_serving(params, self.policy,
+                                                 min_size=1024)
         self.params = params
         self.max_batch = max_batch
         self.bucket = bucket

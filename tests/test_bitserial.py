@@ -2,7 +2,11 @@
 paper's §IV-F dataflow must be *exactly* an integer matmul)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis — deterministic fallback
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import bitplane, bitserial
 

@@ -1,0 +1,143 @@
+"""Fused quantize→bit-plane matmul vs the unfused composition and the
+pure-jnp reference: exact int32 equality and bit-exact scales across all
+supported (w_bits, a_bits) pairs, signednesses, and ragged shapes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitplane
+from repro.core.quant import QuantConfig
+from repro.core.quantized_linear import pack_weight, qmatmul, unpack_weight
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _weight_codes(k, n, w_bits):
+    lo, hi = -(1 << (w_bits - 1)), (1 << (w_bits - 1)) - 1
+    return RNG.integers(lo, hi + 1, (k, n)).astype(np.int32)
+
+
+@pytest.mark.parametrize("w_bits", [2, 4, 8])
+@pytest.mark.parametrize("a_bits", list(range(2, 9)))
+def test_fused_equals_unfused_all_precisions(w_bits, a_bits):
+    """Acceptance sweep: (w_bits, a_bits) ∈ {2,4,8}×{2..8}, exact."""
+    m, k, n = 9, 72, 13
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(_weight_codes(k, n, w_bits))
+    q, s = ops.quantize_rows(x, bits=a_bits)
+    acc_unfused = ops.bitplane_matmul(q, w, a_bits=a_bits)
+    acc_fused, s_fused = ops.fused_quantize_matmul(x, w, a_bits=a_bits)
+    np.testing.assert_array_equal(np.asarray(acc_fused), np.asarray(acc_unfused))
+    np.testing.assert_array_equal(np.asarray(s_fused), np.asarray(s))
+
+
+@pytest.mark.parametrize("a_bits,signed", [(2, False), (4, False), (5, True),
+                                           (8, False), (8, True)])
+def test_fused_signedness(a_bits, signed):
+    m, k, n = 17, 50, 21
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    if not signed:
+        x = jnp.abs(x)  # post-ReLU-style unsigned activations
+    w = jnp.asarray(_weight_codes(k, n, 8))
+    q, s = ops.quantize_rows(x, bits=a_bits, signed=signed)
+    acc_u = ops.bitplane_matmul(q, w, a_bits=a_bits, act_signed=signed)
+    acc_f, s_f = ops.fused_quantize_matmul(x, w, a_bits=a_bits, act_signed=signed)
+    np.testing.assert_array_equal(np.asarray(acc_f), np.asarray(acc_u))
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s))
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 8, 1), (3, 100, 5), (7, 129, 33),
+                                   (128, 300, 130), (40, 512, 256)])
+def test_fused_ragged_shapes(m, k, n):
+    """Non-multiple-of-block shapes: padding must not leak into results."""
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(_weight_codes(k, n, 4))
+    q, s = ops.quantize_rows(x, bits=6)
+    acc_u = ops.bitplane_matmul(q, w, a_bits=6)
+    acc_f, s_f = ops.fused_quantize_matmul(x, w, a_bits=6)
+    np.testing.assert_array_equal(np.asarray(acc_f), np.asarray(acc_u))
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s))
+
+
+@pytest.mark.parametrize("a_bits,signed", [(4, True), (8, False), (3, True)])
+def test_fused_matches_reference_backend(a_bits, signed):
+    """interpret and reference backends agree bit-for-bit."""
+    m, k, n = 11, 64, 19
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(_weight_codes(k, n, 8))
+    acc_i, s_i = ops.fused_quantize_matmul(x, w, a_bits=a_bits, act_signed=signed)
+    acc_r, s_r = ops.fused_quantize_matmul(x, w, a_bits=a_bits, act_signed=signed,
+                                           backend="reference")
+    np.testing.assert_array_equal(np.asarray(acc_i), np.asarray(acc_r))
+    np.testing.assert_array_equal(np.asarray(s_i), np.asarray(s_r))
+
+
+def test_fused_explicit_blocks_do_not_change_results():
+    """Integer accumulation is exact, so block plans are value-neutral."""
+    m, k, n = 24, 160, 48
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(_weight_codes(k, n, 8))
+    base, s0 = ops.fused_quantize_matmul(x, w, a_bits=8)
+    for blocks in [(8, 16, 32), (16, 48, 160), (24, 8, 80)]:
+        acc, s = ops.fused_quantize_matmul(x, w, a_bits=8, blocks=blocks)
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(base))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s0))
+
+
+def test_quantize_rows_unsigned_8bit_codes_survive_storage():
+    """Regression: float→int8 saturation used to corrupt unsigned 8-bit
+    codes (255 → 127); the int32 hop stores the wrapped bit pattern and the
+    bit-plane matmul reconstructs it mod 2^8."""
+    x = jnp.asarray(np.abs(RNG.standard_normal((4, 32))) + 0.1, jnp.float32)
+    q, s = ops.quantize_rows(x, bits=8, signed=False)
+    codes = np.asarray(q).view(np.uint8)
+    assert codes.max() == 255, "row absmax must map to code 255"
+    w = jnp.asarray(_weight_codes(32, 3, 8))
+    acc = ops.bitplane_matmul(q, w, a_bits=8, act_signed=False)
+    want = codes.astype(np.int64) @ np.asarray(w)
+    np.testing.assert_array_equal(np.asarray(acc), want)
+
+
+@pytest.mark.parametrize("w_bits,a_bits", [(8, 8), (4, 8), (2, 4), (4, 6)])
+def test_serve_matmul_kernel_path_uses_fused(w_bits, a_bits):
+    """qmatmul(use_kernel=True) — the serve hot path — stays numerically
+    within the same error budget as before the fusion."""
+    x = jnp.asarray(RNG.standard_normal((24, 128)), jnp.float32)
+    wf = jnp.asarray(RNG.standard_normal((128, 48)) * 0.1, jnp.float32)
+    cfg = QuantConfig(w_bits=w_bits, a_bits=a_bits)
+    pw = pack_weight(wf, cfg)
+    y = qmatmul(x, pw, cfg, use_kernel=True)
+    y_ref = x @ wf
+    rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+    budget = {(8, 8): 0.02, (4, 8): 0.18, (4, 6): 0.19, (2, 4): 0.55}
+    assert rel < budget[(w_bits, a_bits)], rel
+
+
+def test_serve_kernel_path_equals_unfused_composition():
+    """The fused serve path reproduces the manual unfused pipeline exactly
+    (same codes, same int accumulator, same dequant)."""
+    x = jnp.asarray(RNG.standard_normal((12, 64)), jnp.float32)
+    wf = jnp.asarray(RNG.standard_normal((64, 24)) * 0.1, jnp.float32)
+    cfg = QuantConfig(w_bits=4, a_bits=8)
+    pw = pack_weight(wf, cfg)
+    wq = unpack_weight(pw)
+    q, s = ops.quantize_rows(x, bits=8)
+    acc = ops.bitplane_matmul(q, wq, a_bits=8)
+    manual = np.asarray(acc, np.float32) * np.asarray(s) * np.asarray(pw.scale)
+    got = np.asarray(qmatmul(x, pw, cfg, use_kernel=True))
+    np.testing.assert_array_equal(got, manual.astype(np.float32))
+
+
+def test_packed_matmul_wrapper_fused():
+    """ops.packed_matmul (the packed serve composition) vs dequant math."""
+    k, n = 96, 40
+    wq = _weight_codes(k, n, 4)
+    packed = bitplane.pack_weights(jnp.asarray(wq), 4, axis=0)
+    scale = jnp.asarray(RNG.uniform(0.001, 0.01, (n,)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((10, k)), jnp.float32)
+    got = ops.packed_matmul(x, packed, scale, w_bits=4, a_bits=8)
+    q, s = ops.quantize_rows(x, bits=8)
+    want = (np.asarray(q).astype(np.int64) @ wq) * np.asarray(s) * \
+        np.asarray(scale).reshape(1, -1)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want, rtol=1e-6)

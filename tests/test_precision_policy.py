@@ -1,0 +1,176 @@
+"""Per-layer PrecisionPolicy: rule matching, spec parsing, the DSE bridge,
+and end-to-end packing/serving with mixed per-layer precision."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import simulate as sim
+from repro.core import workloads
+from repro.core.precision import (
+    LayerRule,
+    PrecisionPolicy,
+    as_policy,
+    parse_policy_spec,
+    policy_from_dse,
+)
+from repro.core.quant import QuantConfig
+from repro.core.quantized_linear import (
+    PackedWeight,
+    qmatmul,
+    quantize_params_for_serving,
+)
+
+W4A8 = QuantConfig(w_bits=4, a_bits=8)
+W8A8 = QuantConfig(w_bits=8, a_bits=8)
+W2A4 = QuantConfig(w_bits=2, a_bits=4)
+
+
+def test_uniform_policy_matches_everything():
+    pol = PrecisionPolicy.uniform(W4A8)
+    assert pol.for_path("blocks/wq") == W4A8
+    assert pol.for_path("anything/at/all") == W4A8
+
+
+def test_rules_first_match_wins():
+    pol = PrecisionPolicy(
+        default=W4A8,
+        rules=(LayerRule(r"(^|/)wo$", W8A8), LayerRule(r"ffn", W2A4)),
+    )
+    assert pol.for_path("blocks/wo") == W8A8
+    assert pol.for_path("blocks/ffn/w_up") == W2A4
+    assert pol.for_path("blocks/wq") == W4A8
+
+
+def test_as_policy_normalizes():
+    assert as_policy(None) is None
+    assert as_policy(W4A8) == PrecisionPolicy.uniform(W4A8)
+    pol = PrecisionPolicy.uniform(W8A8)
+    assert as_policy(pol) is pol
+    with pytest.raises(TypeError):
+        as_policy("w4a8")
+
+
+def test_parse_policy_spec():
+    pol = parse_policy_spec("w4a8;wo=w8a8;moe/w_up=w2a4r10")
+    assert pol.default == W4A8
+    assert pol.for_path("blocks/wo") == W8A8
+    got = pol.for_path("moe/w_up")
+    assert (got.w_bits, got.a_bits, got.mixed_ratio_8b) == (2, 4, 0.10)
+    assert "w4a8" in pol.describe()
+
+
+def test_parse_policy_spec_rejects_bad_input():
+    with pytest.raises(ValueError):
+        parse_policy_spec("wo=w8a8")  # no default
+    with pytest.raises(ValueError):
+        parse_policy_spec("w4a8;w8a8")  # duplicate default
+    with pytest.raises(ValueError):
+        parse_policy_spec("w5a8")  # unsupported bits
+
+
+def test_packed_leaf_carries_activation_precision():
+    from repro.core.quantized_linear import pack_weight
+
+    pw = pack_weight(jnp.ones((32, 16), jnp.float32), W2A4)
+    assert (pw.bits, pw.a_bits, pw.act_signed) == (2, 4, True)
+    # pytree round-trip keeps the aux data
+    leaves, tdef = jax.tree_util.tree_flatten(pw)
+    pw2 = jax.tree_util.tree_unflatten(tdef, leaves)
+    assert (pw2.bits, pw2.a_bits, pw2.act_signed) == (2, 4, True)
+
+
+def test_quantize_params_per_layer_policy():
+    rng = np.random.default_rng(0)
+    params = {
+        "blocks": {
+            "wq": jnp.asarray(rng.standard_normal((128, 128)), jnp.float32),
+            "wo": jnp.asarray(rng.standard_normal((128, 128)), jnp.float32),
+        },
+        "embed": jnp.asarray(rng.standard_normal((128, 128)), jnp.float32),
+    }
+    pol = PrecisionPolicy(default=W4A8, rules=(LayerRule(r"(^|/)wo$", W8A8),))
+    packed = quantize_params_for_serving(params, pol, min_size=1024)
+    assert packed["blocks"]["wq"].bits == 4
+    assert packed["blocks"]["wq"].a_bits == 8
+    assert packed["blocks"]["wo"].bits == 8
+    assert not isinstance(packed["embed"], PackedWeight)  # excluded
+
+
+def test_uniform_config_still_accepted():
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)}
+    packed = quantize_params_for_serving(params, W4A8, min_size=1024)
+    assert packed["w"].bits == 4
+
+
+def test_qmatmul_uses_leaf_precision_without_cfg():
+    """A packed leaf's own a_bits drives the serve matmul when no global
+    config is passed — the per-layer policy reaches the kernel."""
+    from repro.core.quantized_linear import pack_weight
+
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    wf = jnp.asarray(rng.standard_normal((64, 32)) * 0.1, jnp.float32)
+    pw8 = pack_weight(wf, QuantConfig(w_bits=8, a_bits=8))
+    pw2 = pack_weight(wf, QuantConfig(w_bits=8, a_bits=2))
+    y8 = np.asarray(qmatmul(x, pw8, None, use_kernel=True))
+    y2 = np.asarray(qmatmul(x, pw2, None, use_kernel=True))
+    # 2-bit activations are a much coarser grid → outputs must differ, and
+    # the 8-bit path must be far more accurate.
+    ref = np.asarray(x @ wf)
+    err8 = np.linalg.norm(y8 - ref) / np.linalg.norm(ref)
+    err2 = np.linalg.norm(y2 - ref) / np.linalg.norm(ref)
+    assert err8 < 0.03 < err2
+
+
+def test_serving_engine_accepts_policy():
+    """End-to-end: a per-layer policy serves and packs layers differently."""
+    from repro.configs import get_reduced_config
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_reduced_config("olmo-1b")
+    import jax as _jax
+
+    from repro.models import build_model
+
+    params = build_model(cfg).init(_jax.random.PRNGKey(0))
+    pol = parse_policy_spec("w4a8;wo=w8a8")
+    eng = ServingEngine(cfg, params, max_batch=2, quant=pol, bucket=16)
+    bits = {}
+    def collect(path, leaf):
+        if isinstance(leaf, PackedWeight):
+            bits[jax.tree_util.keystr(path)] = leaf.bits
+    jax.tree_util.tree_map_with_path(
+        collect, eng.params,
+        is_leaf=lambda x: isinstance(x, PackedWeight))
+    assert bits, "policy must pack at least one layer"
+    assert any("wo" in p for p in bits)
+    assert all(b == 8 for p, b in bits.items() if "wo" in p)
+    assert all(b == 4 for p, b in bits.items() if "wq" in p)
+    out = eng.generate([Request(0, np.arange(6) % 64, max_new_tokens=3)])[0]
+    assert len(out.out_tokens) == 3
+
+
+def _small_net():
+    return [
+        workloads.Layer("l0", 64, 64, 3, 3, 8, 8),
+        workloads.Layer("l1", 64, 128, 3, 3, 8, 8),
+        workloads.Layer("l2", 128, 128, 1, 1, 4, 4),
+    ]
+
+
+def test_policy_from_dse_smoke():
+    fpga = sim.Fpga("toy", 128, 256)
+    cim = sim.M4BRAM_S_DP
+    pol = policy_from_dse(_small_net(), fpga, cim, a_bits=8)
+    assert len(pol.rules) == 3
+    # Boundary layers protected at 8-bit.
+    assert pol.for_path("l0").w_bits == 8
+    assert pol.for_path("l2").w_bits == 8
+    # Every assigned precision is a supported weight width.
+    for rule in pol.rules:
+        assert rule.cfg.w_bits in (2, 4, 8)
+        assert rule.cfg.a_bits == 8
+    # Unknown layers fall back to the conservative default.
+    assert pol.for_path("unseen_layer").w_bits == 8
