@@ -17,6 +17,7 @@ from benchmarks import (
     kernel_bench,
     quant_error,
     roofline_table,
+    serving_bench,
     table3_intralayer,
 )
 
@@ -29,6 +30,7 @@ MODULES = {
     "quant_error": quant_error,
     "kernels": kernel_bench,
     "roofline": roofline_table,
+    "serving": serving_bench,
 }
 
 

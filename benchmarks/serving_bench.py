@@ -1,0 +1,154 @@
+"""Static vs continuous-batching serving benchmark.
+
+For each arrival rate, the same mixed-length workload (short and long
+prompts, short and long outputs) is served two ways:
+
+  * static     — requests queue until a batch slot opens, then run as a
+    classic static batch (`ServingEngine.generate_static`): every request
+    in a batch waits for the slowest one, and queued requests wait for the
+    whole batch to drain.
+  * continuous — `ContinuousScheduler`: a request is admitted the moment
+    a slot frees mid-decode and retires at its own max_new/EOS.
+
+Reports per-mode throughput and mean/p90 request latency (completion −
+arrival, wall clock) and writes BENCH_serving.json at the repo root.
+Continuous batching should win mean latency at every rate — that gap is
+the point of the subsystem.
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+
+import jax
+import numpy as np
+
+
+def _requests(rng, n, vocab, rate):
+    """Mixed prompt/output lengths; Poisson-ish arrivals at `rate` req/s
+    (rate 0 = everything queued at t=0)."""
+    reqs = []
+    t = 0.0
+    from repro.serving import Request
+
+    for i in range(n):
+        plen = int(rng.integers(4, 24))
+        max_new = int(rng.integers(2, 14))
+        reqs.append(Request(rid=i, prompt=rng.integers(0, vocab, plen),
+                            max_new_tokens=max_new, arrival_time=t))
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+    return reqs
+
+
+def _run_static(engine, reqs):
+    """Arrival-aware static serving: collect due requests, run them as a
+    static batch, repeat. Latency = completion − arrival."""
+    queue = sorted(reqs, key=lambda r: r.arrival_time)
+    t0 = time.perf_counter()
+    done = []
+    while queue:
+        now = time.perf_counter() - t0
+        if queue[0].arrival_time > now:
+            time.sleep(min(queue[0].arrival_time - now, 0.05))
+            continue
+        # Due requests are a prefix of the arrival-sorted queue.
+        n_due = sum(r.arrival_time <= now for r in queue)
+        batch = queue[:min(n_due, engine.max_batch)]
+        queue = queue[len(batch):]
+        engine.generate_static(batch)
+        t_done = time.perf_counter() - t0
+        for r in batch:
+            r.t_done = t_done
+        done.extend(batch)
+    return done, time.perf_counter() - t0
+
+
+def _run_continuous(engine, reqs):
+    t0 = time.perf_counter()
+    done = engine.generate(reqs)
+    return done, time.perf_counter() - t0
+
+
+def _stats(done, wall):
+    lats = [r.t_done - r.arrival_time for r in done]
+    toks = sum(len(r.out_tokens) for r in done)
+    return {
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(toks / wall, 1),
+        "mean_latency_ms": round(float(np.mean(lats)) * 1e3, 1),
+        "p90_latency_ms": round(float(np.percentile(lats, 90)) * 1e3, 1),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(get_reduced_config("olmo-1b"), vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n = 6 if quick else 12
+    rates = [0.0] if quick else [0.0, 20.0, 5.0]
+    max_batch = 3
+    rows = []
+    results = {}
+
+    # Warmup both paths once (compiles every prefill bucket + decode).
+    warm_rng = np.random.default_rng(1)
+    eng = ServingEngine(cfg, params, max_batch=max_batch, bucket=8,
+                        max_ctx=64)
+    eng.generate_static(_requests(warm_rng, 4, cfg.vocab, 0.0))
+    warm_rng = np.random.default_rng(1)
+    eng.generate(_requests(warm_rng, 4, cfg.vocab, 0.0))
+
+    for rate in rates:
+        row = {"arrival_rate_per_s": rate if rate else "all-at-once"}
+        for mode, runner in (("static", _run_static),
+                             ("continuous", _run_continuous)):
+            rng = np.random.default_rng(7)  # same workload per mode
+            reqs = _requests(rng, n, cfg.vocab, rate)
+            done, wall = runner(eng, reqs)
+            st = _stats(done, wall)
+            row[mode] = st
+            tag = rate if rate else "inf"
+            emit(f"serving/{mode}/rate_{tag}", st["wall_s"] * 1e6,
+                 f"mean_latency_ms={st['mean_latency_ms']} "
+                 f"tok_per_s={st['tok_per_s']}")
+            results[f"{mode}_rate_{tag}"] = st["mean_latency_ms"]
+        row["latency_speedup"] = round(
+            row["static"]["mean_latency_ms"]
+            / max(row["continuous"]["mean_latency_ms"], 1e-9), 2)
+        rows.append(row)
+
+    if quick:
+        # CI smoke: don't overwrite the committed full-sweep artifact.
+        return results
+    bench_path = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+    bench_path.write_text(json.dumps({
+        "note": ("reduced olmo-1b on CPU; static = batched generate with "
+                 "early exit, continuous = slot scheduler with mid-decode "
+                 "admission; latency is completion - arrival (wall clock)"),
+        "config": {"max_batch": max_batch, "requests": n},
+        "rows": rows,
+    }, indent=2) + "\n")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one rate, fewer requests (CI smoke)")
+    args = ap.parse_args()
+    run(quick=args.quick)

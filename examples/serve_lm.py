@@ -3,6 +3,11 @@ path — weights stored packed (2/4/8-bit) in memory, every matmul runs
 bit-plane decode, KV cache optionally int8.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--quant w4a8] [--kv-int8]
+      PYTHONPATH=src python examples/serve_lm.py --continuous --rate 10
+
+--continuous streams tokens from the continuous-batching scheduler while
+requests arrive staggered (Poisson-ish gaps at --rate requests/s) and are
+admitted into decode slots as earlier requests retire.
 """
 import argparse
 import sys
@@ -23,6 +28,9 @@ def main():
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--continuous", action="store_true")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="continuous mode: arrival rate in requests/s")
     args = ap.parse_args()
 
     from repro.configs import get_reduced_config
@@ -50,16 +58,27 @@ def main():
                 temperature=0.0 if i % 2 == 0 else 0.8)
         for i in range(args.requests)
     ]
+    streamed = []
+    if args.continuous:
+        t = 0.0
+        for r in reqs:
+            r.arrival_time = t
+            t += float(rng.exponential(1.0 / args.rate))
+        engine.on_token = lambda req, tok: streamed.append((req.rid, tok))
     t0 = time.perf_counter()
-    done = engine.generate(reqs)
+    done = engine.generate(reqs) if args.continuous else \
+        engine.generate_static(reqs)
     dt = time.perf_counter() - t0
     total_new = sum(len(r.out_tokens) for r in done)
-    print(f"quant={args.quant or 'off'} kv_int8={args.kv_int8} — "
+    mode = "continuous" if args.continuous else "static"
+    print(f"quant={args.quant or 'off'} kv_int8={args.kv_int8} [{mode}] — "
           f"{len(done)} requests, {total_new} tokens in {dt:.1f}s "
           f"({total_new/dt:.1f} tok/s incl. compile)")
-    for r in done[:3]:
+    for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req {r.rid}: prompt[:4]={list(r.prompt[:4])} -> "
               f"out={r.out_tokens}")
+    if args.continuous:
+        print(f"  streamed {len(streamed)} tokens; first 8: {streamed[:8]}")
 
 
 if __name__ == "__main__":

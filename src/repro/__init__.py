@@ -11,7 +11,7 @@ Subpackages:
   optim     — AdamW + schedules (from scratch)
   checkpoint— atomic, elastic checkpoint manager
   train     — fault-tolerant training loop
-  serving   — batched prefill/decode engine
+  serving   — continuous-batching scheduler + engine, on-device sampling
   configs   — assigned architecture configs + shape sets
   launch    — production mesh, multi-pod dry-run, train/serve drivers
   roofline  — TPU v5e roofline term extraction from compiled artifacts

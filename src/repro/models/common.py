@@ -267,21 +267,27 @@ def decode_attention(
     q: jax.Array,        # (B, 1, NQ, H) — single new token
     k_cache: jax.Array,  # (B, S, NKV, H) (bf16, or int8 codes if k_scale)
     v_cache: jax.Array,
-    kpos: jax.Array,     # (S,) absolute position per cache slot (−1 = empty)
-    q_pos: jax.Array,    # scalar int32 — current position
+    kpos: jax.Array,     # (B, S) per-row absolute slot positions (−1 = empty)
+    q_pos: jax.Array,    # (B,) per-row current position
     window: int = 0,
     softcap: float = 0.0,
     k_scale: jax.Array | None = None,  # (B, S, NKV, 1) int8-cache scales
     v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """One-token attention over a (possibly ring-buffered, possibly
-    int8-quantized) cache. For the quantized cache, scores are computed on
+    int8-quantized) cache. Every batch row carries its own slot positions
+    and decode position, so rows at different depths (continuous batching)
+    coexist in one call. Legacy shared positions — kpos (S,), scalar q_pos
+    — are broadcast. For the quantized cache, scores are computed on
     int8 codes and rescaled per key slot — the dequant never materializes
     a bf16 copy of the cache."""
     B, _, NQ, H = q.shape
     NKV = k_cache.shape[2]
     G = NQ // NKV
     scale = H**-0.5
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (B,))
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos[None], (B, kpos.shape[0]))
     qr = q.reshape(B, NKV, G, H)
     s = jnp.einsum("bngh,bsnh->bngs", qr.astype(jnp.float32),
                    k_cache.astype(jnp.float32))
@@ -290,10 +296,10 @@ def decode_attention(
     s = s * scale
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
-    valid = (kpos >= 0) & (kpos <= q_pos)
+    valid = (kpos >= 0) & (kpos <= q_pos[:, None])           # (B, S)
     if window:
-        valid = valid & (kpos > q_pos - window)
-    s = jnp.where(valid[None, None, None], s, jnp.finfo(jnp.float32).min)
+        valid = valid & (kpos > q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
     p = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:
         p = p * jnp.moveaxis(v_scale[..., 0], -1, 1)[:, :, None, :]

@@ -317,9 +317,9 @@ def _pack_cache(cfg: ModelConfig, states, B: int, S: int) -> DecodeCache:
     rec = RecurrentState(h=hs, conv_tail=tails)
     kv = KVCache(
         k=k_all, v=v_all, slot_pos=slot_pos,
-        length=jnp.asarray(S, jnp.int32), window=w,
+        length=jnp.full((B,), S, jnp.int32), window=w,
     )
-    return DecodeCache(pos=jnp.asarray(S, jnp.int32), kv=kv, rec=rec)
+    return DecodeCache(pos=jnp.full((B,), S, jnp.int32), kv=kv, rec=rec)
 
 
 def prefill(params, cfg: ModelConfig, batch):
@@ -353,7 +353,7 @@ def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens):
             q = cm.linear(h, lp["mix"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
             k = cm.linear(h, lp["mix"]["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
             v = cm.linear(h, lp["mix"]["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
-            pp = pos[None, None] * jnp.ones((B, 1), jnp.int32)
+            pp = pos[:, None]                     # (B, 1) per-slot positions
             q = cm.rope(q, pp, cfg.rope_theta)
             k = cm.rope(k, pp, cfg.rope_theta)
             kc, vc, spc = cache_write(kk[ai], vv[ai], sp[ai], k, v, pos,
@@ -410,4 +410,4 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> DecodeCache:
         h=jnp.zeros((n_rec, batch, cfg.rnn_width), jnp.float32),
         conv_tail=jnp.zeros((n_rec, batch, cfg.conv_width - 1, cfg.rnn_width), dt),
     )
-    return DecodeCache(pos=jnp.asarray(seq_len, jnp.int32), kv=kv, rec=rec)
+    return DecodeCache(pos=jnp.full((batch,), seq_len, jnp.int32), kv=kv, rec=rec)

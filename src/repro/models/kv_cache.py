@@ -21,8 +21,14 @@ import jax.numpy as jnp
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class KVCache:
-    """k/v: (L, B, S, NKV, H); slot_pos: (L, S) absolute position of each
-    slot (−1 = empty); length: scalar count of tokens written.
+    """k/v: (L, B, S, NKV, H); slot_pos: (L, B, S) absolute position of each
+    cache slot *per batch row* (−1 = empty); length: (B,) per-row count of
+    tokens written.
+
+    Every position-tracking leaf carries a batch axis so the continuous-
+    batching scheduler can hold sequences at different decode depths in one
+    cache: batch row b advances independently, and admitting a new request
+    only rewrites row b (see `scatter_into_slot`).
 
     Optional int8 quantization (§Perf lever, the paper's activation-
     quantization idea applied to the cache): k/v hold int8 codes and
@@ -64,8 +70,8 @@ class KVCache:
         return KVCache(
             k=jnp.zeros((layers, batch, s, n_kv, head_dim), kd),
             v=jnp.zeros((layers, batch, s, n_kv, head_dim), kd),
-            slot_pos=jnp.full((layers, s), -1, jnp.int32),
-            length=jnp.zeros((), jnp.int32),
+            slot_pos=jnp.full((layers, batch, s), -1, jnp.int32),
+            length=jnp.zeros((batch,), jnp.int32),
             k_scale=scale,
             v_scale=jnp.copy(scale) if quantized else None,
             window=window,
@@ -86,12 +92,12 @@ def ring_align(k_last, v_last, S: int, window: int):
     layer-stacked: (L, B, s, NKV, H)) to the ring-buffer invariant used by
     cache_write: position p lives at slot p % ring_size.
 
-    Returns (k, v, slot_pos (L, ring)) with ring = window (padded when
+    Returns (k, v, slot_pos (L, B, ring)) with ring = window (padded when
     S < window; rolled by S % window when S > window so array index and
     slot agree)."""
     import jax.numpy as jnp
 
-    L = k_last.shape[0]
+    L, B = k_last.shape[0], k_last.shape[1]
     s = k_last.shape[2]
     if S <= window:
         pad = window - s
@@ -109,22 +115,37 @@ def ring_align(k_last, v_last, S: int, window: int):
         v_last = jnp.roll(v_last, shift, axis=2)
         kept = jnp.arange(S - window, S, dtype=jnp.int32)
         slot_pos = jnp.zeros((window,), jnp.int32).at[kept % window].set(kept)
-    return k_last, v_last, jnp.broadcast_to(slot_pos, (L, window))
+    return k_last, v_last, jnp.broadcast_to(slot_pos, (L, B, window))
+
+
+def write_slot(pos, size, window: int):
+    """Cache slot index for absolute position(s) `pos`.
+    Full cache: slot = pos (clamped). Ring buffer: slot = pos % size."""
+    return jnp.where(window > 0, pos % size, jnp.minimum(pos, size - 1))
+
+
+def row_write(cache, new, slot):
+    """Per-row slot write: cache (B, S, ...), new (B, 1, ...), slot (B,).
+    Each batch row writes its own slot (lowered as a batched scatter)."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), s, axis=0
+        )
+    )(cache, new, slot)
 
 
 def cache_write(k_cache, v_cache, slot_pos, k_new, v_new, pos, window: int):
-    """Write one token's k/v (B, 1, NKV, H) at absolute position `pos`.
+    """Write one token's k/v (B, 1, NKV, H) at per-row absolute positions
+    `pos` (B,) — each batch row advances independently (per-slot decode).
 
-    Full cache: slot = pos. Ring buffer: slot = pos % size.
-    Returns updated (k_cache, v_cache, slot_pos).
+    Full cache: slot = pos. Ring buffer: slot = pos % size. slot_pos is
+    (B, S). Returns updated (k_cache, v_cache, slot_pos).
     """
     size = k_cache.shape[1]
-    slot = jnp.where(window > 0, pos % size, jnp.minimum(pos, size - 1))
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, axis=1)
-    slot_pos = jax.lax.dynamic_update_slice_in_dim(
-        slot_pos, pos[None].astype(jnp.int32), slot, axis=0
-    )
+    slot = write_slot(pos, size, window)
+    k_cache = row_write(k_cache, k_new, slot)
+    v_cache = row_write(v_cache, v_new, slot)
+    slot_pos = row_write(slot_pos, pos[:, None].astype(jnp.int32), slot)
     return k_cache, v_cache, slot_pos
 
 
@@ -169,7 +190,11 @@ class RwkvState:
 @dataclasses.dataclass
 class DecodeCache:
     """Top-level decode carry: whichever sub-states the family uses, plus
-    the global position counter."""
+    per-slot position counters.
+
+    pos: (B,) int32 — the absolute position each batch slot decodes at.
+    Slots are independent: the continuous-batching scheduler holds requests
+    at different depths in one cache and one compiled decode signature."""
 
     pos: jax.Array
     kv: Optional[KVCache] = None
@@ -182,3 +207,75 @@ class DecodeCache:
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         return cls(*leaves)
+
+
+# --------------------------------------------------------------------------
+# Slot scatter: admit one prefilled request into a batch cache row
+# --------------------------------------------------------------------------
+
+
+def _write_row(big, small, slot):
+    """Overwrite batch row `slot` of `big` (batch axis 1) with `small`
+    (batch axis 1 of size 1)."""
+    start = (0, slot) + (0,) * (big.ndim - 2)
+    return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), start)
+
+
+def _pad_seq(x, size: int, fill):
+    """Pad the cache-slot axis (axis 2) of a solo-prefill leaf up to the
+    batch cache's fixed size."""
+    s = x.shape[2]
+    if s == size:
+        return x
+    if s > size:
+        raise ValueError(
+            f"prefilled cache ({s} slots) exceeds batch cache capacity "
+            f"({size}); raise the scheduler's max_ctx"
+        )
+    pad = jnp.full((*x.shape[:2], size - s, *x.shape[3:]), fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=2)
+
+
+def _scatter_kv(big: KVCache, small: KVCache, slot) -> KVCache:
+    size = big.k.shape[2]
+    k = _write_row(big.k, _pad_seq(small.k, size, 0), slot)
+    v = _write_row(big.v, _pad_seq(small.v, size, 0), slot)
+    sp = _write_row(big.slot_pos, _pad_seq(small.slot_pos, size, -1), slot)
+    length = jax.lax.dynamic_update_slice(
+        big.length, small.length.astype(big.length.dtype), (slot,)
+    )
+    ks = vs = None
+    if big.quantized:
+        ks = _write_row(big.k_scale, _pad_seq(small.k_scale, size, 0.0), slot)
+        vs = _write_row(big.v_scale, _pad_seq(small.v_scale, size, 0.0), slot)
+    return KVCache(k=k, v=v, slot_pos=sp, length=length,
+                   k_scale=ks, v_scale=vs, window=big.window)
+
+
+def scatter_into_slot(batch: DecodeCache, solo: DecodeCache, slot) -> DecodeCache:
+    """Admit a solo-prefilled request (batch axis of size 1) into batch
+    row `slot` of a live decode cache. Only row `slot` changes — every
+    other slot's KV / recurrent / RWKV state and position is untouched,
+    which is what makes mid-decode admission safe.
+
+    `slot` may be a traced scalar: one compiled scatter serves all slots
+    (per solo-prefill length)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    pos = jax.lax.dynamic_update_slice(
+        batch.pos, solo.pos.astype(batch.pos.dtype), (slot,)
+    )
+    kv = _scatter_kv(batch.kv, solo.kv, slot) if batch.kv is not None else None
+    rec = None
+    if batch.rec is not None:
+        rec = RecurrentState(
+            h=_write_row(batch.rec.h, solo.rec.h, slot),
+            conv_tail=_write_row(batch.rec.conv_tail, solo.rec.conv_tail, slot),
+        )
+    rwkv = None
+    if batch.rwkv is not None:
+        rwkv = RwkvState(
+            wkv=_write_row(batch.rwkv.wkv, solo.rwkv.wkv, slot),
+            tm_shift=_write_row(batch.rwkv.tm_shift, solo.rwkv.tm_shift, slot),
+            cm_shift=_write_row(batch.rwkv.cm_shift, solo.rwkv.cm_shift, slot),
+        )
+    return DecodeCache(pos=pos, kv=kv, rec=rec, rwkv=rwkv)

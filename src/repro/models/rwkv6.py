@@ -278,8 +278,8 @@ def train_loss(params, cfg: ModelConfig, batch):
 def prefill(params, cfg: ModelConfig, batch):
     hidden, state = _forward(params, cfg, batch["tokens"], None)
     logits = cm.logits_head(hidden[:, -1:], params["head"])
-    S = batch["tokens"].shape[1]
-    return DecodeCache(pos=jnp.asarray(S, jnp.int32), rwkv=state), logits
+    B, S = batch["tokens"].shape
+    return DecodeCache(pos=jnp.full((B,), S, jnp.int32), rwkv=state), logits
 
 
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens):
@@ -309,7 +309,9 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> DecodeCache:
     H, K = _dims(cfg)
     z = jnp.zeros((cfg.num_layers, batch, H, K, K), jnp.float32)
     zt = jnp.zeros((cfg.num_layers, batch, cfg.d_model), jnp.dtype(cfg.dtype))
+    # Distinct buffers per leaf: the serving scheduler passes this cache to
+    # donating jitted calls, which reject one buffer appearing twice.
     return DecodeCache(
-        pos=jnp.asarray(seq_len, jnp.int32),
-        rwkv=RwkvState(wkv=z, tm_shift=zt, cm_shift=zt),
+        pos=jnp.full((batch,), seq_len, jnp.int32),
+        rwkv=RwkvState(wkv=z, tm_shift=zt, cm_shift=jnp.copy(zt)),
     )

@@ -144,25 +144,25 @@ def block_decode(
     p: dict,
     cfg: ModelConfig,
     x: jax.Array,            # (B, 1, d)
-    pos: jax.Array,          # scalar position
+    pos: jax.Array,          # (B,) per-slot positions
     k_cache, v_cache, slot_pos, k_scale=None, v_scale=None,
 ):
-    """Single-token block against a (ring) cache. Returns x + new cache."""
+    """Single-token block against a (ring) cache. Every batch slot decodes
+    at its own position. Returns x + new cache."""
     h = cm.apply_norm(x, p["ln1"], cfg.norm)
-    positions = pos[None, None] * jnp.ones((x.shape[0], 1), jnp.int32)
+    positions = pos[:, None]                      # (B, 1)
     q, k, v = _attention_qkv(p, cfg, h, positions)
     if cfg.kv_cache_quant:
-        from repro.models.kv_cache import quantize_kv
+        from repro.models.kv_cache import quantize_kv, row_write, write_slot
 
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
         k_cache, v_cache, slot_pos = cache_write(
             k_cache, v_cache, slot_pos, kq, vq, pos, cfg.attn_window
         )
-        slot = jnp.where(cfg.attn_window > 0, pos % k_cache.shape[1],
-                         jnp.minimum(pos, k_cache.shape[1] - 1))
-        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, slot, axis=1)
-        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, slot, axis=1)
+        slot = write_slot(pos, k_cache.shape[1], cfg.attn_window)
+        k_scale = row_write(k_scale, ks, slot)
+        v_scale = row_write(v_scale, vs, slot)
     else:
         k_cache, v_cache, slot_pos = cache_write(
             k_cache, v_cache, slot_pos, k, v, pos, cfg.attn_window
@@ -299,7 +299,7 @@ def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
     else:
         size = k_all.shape[2]
         slot_pos = jnp.broadcast_to(jnp.arange(size, dtype=jnp.int32),
-                                    (cfg.num_layers, size))
+                                    (cfg.num_layers, B, size))
     if not w:
         # Full cache: leave headroom slots for tokens decoded next.
         pad = DECODE_HEADROOM
@@ -307,7 +307,8 @@ def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
         k_all = jnp.concatenate([k_all, zk], axis=2)
         v_all = jnp.concatenate([v_all, zk], axis=2)
         slot_pos = jnp.concatenate(
-            [slot_pos, jnp.full((slot_pos.shape[0], pad), -1, jnp.int32)], axis=1
+            [slot_pos, jnp.full((*slot_pos.shape[:2], pad), -1, jnp.int32)],
+            axis=2,
         )
     if cfg.kv_cache_quant:
         from repro.models.kv_cache import quantize_kv
@@ -322,18 +323,19 @@ def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
         k=k_all,
         v=v_all,
         slot_pos=slot_pos,
-        length=jnp.asarray(S, jnp.int32),
+        length=jnp.full((B,), S, jnp.int32),
         k_scale=k_scale,
         v_scale=v_scale,
         window=w,
     )
     hidden = cm.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
     logits = compute_logits(params, cfg, hidden)
-    return DecodeCache(pos=jnp.asarray(S, jnp.int32), kv=kvc), logits
+    return DecodeCache(pos=jnp.full((B,), S, jnp.int32), kv=kvc), logits
 
 
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array):
-    """tokens: (B, 1) → (new_cache, logits (B, 1, V))."""
+    """tokens: (B, 1) → (new_cache, logits (B, 1, V)). cache.pos is (B,):
+    each slot decodes at its own position (continuous batching)."""
     scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
     x = cm.embed_lookup(params["embed"], tokens, scale=scale)
     x = constrain(x, "batch", None, None)
@@ -376,4 +378,4 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> DecodeCache:
         cfg.head_dim, window=cfg.attn_window, dtype=_dtype(cfg),
         quantized=cfg.kv_cache_quant,
     )
-    return DecodeCache(pos=jnp.asarray(seq_len, jnp.int32), kv=kvc)
+    return DecodeCache(pos=jnp.full((batch,), seq_len, jnp.int32), kv=kvc)

@@ -1,1 +1,2 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.scheduler import ContinuousScheduler, Request  # noqa: F401

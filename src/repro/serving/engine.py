@@ -1,24 +1,26 @@
-"""Batched serving engine: continuous-batching prefill/decode with the
-M4BRAM quantized-weight path.
+"""Batched serving engine over the M4BRAM quantized-weight path.
 
-The engine owns:
-  * a request queue with admission up to `max_batch` concurrent sequences,
-  * one jitted prefill per bucketed prompt length + one jitted decode step,
-  * optional serving-time weight quantization (PackedWeight params) — the
-    paper's technique as deployed: weights live packed in HBM and every
-    matmul runs the bit-plane path, cutting weight bytes by 8/w_bits×.
-    `quant` takes either a single QuantConfig (uniform precision) or a
-    per-layer PrecisionPolicy (repro.core.precision) so different layers
-    serve at different (w_bits, a_bits),
-  * simple greedy / temperature sampling.
+The engine owns serving-time weight quantization (PackedWeight params —
+the paper's technique as deployed: weights live packed in HBM and every
+matmul runs the bit-plane path, cutting weight bytes by 8/w_bits×; `quant`
+takes either a single QuantConfig or a per-layer PrecisionPolicy) and two
+execution modes:
 
-Decode batches one token across all live sequences per step (static batch,
-finished slots masked) — the standard TPU-serving shape discipline: every
-step has one compiled signature.
+  * `generate`     — continuous batching via `ContinuousScheduler`: one
+    fixed compiled decode signature, solo prefill scattered into freed
+    slots mid-decode, per-slot EOS/max_new retirement, on-device sampling.
+  * `generate_static` — the classic static batch (batched prefill → decode
+    loop, finished slots masked), kept as the baseline the serving
+    benchmark measures continuous batching against. The decode loop exits
+    as soon as every sequence in the batch has finished.
+
+Greedy outputs are identical between the two modes when prompts bucket to
+the same prefill length; sampled outputs are too, because both paths draw
+from the same per-request (seed, rid, step) PRNG streams
+(`repro.serving.sampling`).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional, Union
 
 import jax
@@ -30,15 +32,8 @@ from repro.core.precision import PrecisionPolicy, as_policy
 from repro.core.quant import QuantConfig
 from repro.core.quantized_linear import quantize_params_for_serving
 from repro.models import build_model
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (T,) int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    out_tokens: Optional[List[int]] = None
+from repro.serving import sampling
+from repro.serving.scheduler import ContinuousScheduler, Request  # noqa: F401
 
 
 class ServingEngine:
@@ -50,6 +45,8 @@ class ServingEngine:
         quant: Union[None, QuantConfig, PrecisionPolicy] = None,
         bucket: int = 64,
         seed: int = 0,
+        max_ctx: Optional[int] = None,
+        on_token=None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -60,7 +57,10 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.bucket = bucket
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.max_ctx = max_ctx
+        self.on_token = on_token            # streamed-token callback
+        self._sched: Optional[ContinuousScheduler] = None
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
 
@@ -72,8 +72,40 @@ class ServingEngine:
     def _bucketed(self, n: int) -> int:
         return max(self.bucket, -(-n // self.bucket) * self.bucket)
 
+    # -- continuous path ----------------------------------------------------
+
+    def scheduler(self, max_ctx: Optional[int] = None) -> ContinuousScheduler:
+        """The engine's (lazily built) continuous scheduler. Rebuilt only
+        if a larger context bound is requested."""
+        need = max(max_ctx or 0, self.max_ctx or 0) or 128
+        if self._sched is None or need > self._sched.max_ctx:
+            self._sched = ContinuousScheduler(
+                self.cfg, self.params, max_batch=self.max_batch,
+                max_ctx=need, quant=None, bucket=self.bucket, seed=self.seed,
+                on_token=self.on_token,
+            )
+        self._sched.on_token = self.on_token  # pick up late reassignment
+        return self._sched
+
+    def _ctx_needed(self, requests: List[Request]) -> int:
+        return max(self._bucketed(len(r.prompt)) + r.max_new_tokens
+                   for r in requests)
+
     def generate(self, requests: List[Request]) -> List[Request]:
-        """Synchronous batch generation (prefill batch → decode loop)."""
+        """Continuous-batching generation: requests are admitted into free
+        slots as they open (honouring `arrival_time`), retired on EOS or
+        max_new_tokens. Returns the input requests (out_tokens filled),
+        in input order."""
+        if not requests:
+            return []
+        self.scheduler(self._ctx_needed(requests)).run(requests)
+        return list(requests)
+
+    # -- static baseline ----------------------------------------------------
+
+    def generate_static(self, requests: List[Request]) -> List[Request]:
+        """Static batch generation (prefill batch → decode loop). The
+        baseline continuous batching is benchmarked against."""
         out: List[Request] = []
         for i in range(0, len(requests), self.max_batch):
             out.extend(self._generate_batch(requests[i : i + self.max_batch]))
@@ -87,27 +119,36 @@ class ServingEngine:
             tokens[i, L - len(r.prompt):] = r.prompt  # left-pad
         batch = {"tokens": jnp.asarray(tokens)}
         cache, logits = self._prefill_fn(L)(self.params, batch)
+
+        temps = np.asarray([r.temperature for r in reqs], np.float32)
+        top_ks = np.asarray([r.top_k for r in reqs], np.int32)
+        keys = np.stack([sampling.request_key(self.seed, r.rid) for r in reqs])
+        steps = np.zeros((B,), np.int32)
+
+        def sample(lg):
+            return np.asarray(sampling.sample_tokens(
+                lg[:, -1, :], temps, top_ks, keys, steps))
+
+        cur = sample(logits)
+        steps += 1
+        outs = [[int(cur[i])] for i in range(B)]
+        done = [len(o) >= r.max_new_tokens
+                or (r.eos_id is not None and o[-1] == r.eos_id)
+                for o, r in zip(outs, reqs)]
         max_new = max(r.max_new_tokens for r in reqs)
-        cur = self._sample(logits, reqs)
-        outs = [[int(cur[i, 0])] for i in range(B)]
         for _ in range(max_new - 1):
-            cache, logits = self._decode(self.params, cache, jnp.asarray(cur))
-            cur = self._sample(logits, reqs)
-            for i in range(B):
-                if len(outs[i]) < reqs[i].max_new_tokens:
-                    outs[i].append(int(cur[i, 0]))
+            if all(done):
+                break  # every sequence hit max_new/EOS — no wasted steps
+            cache, logits = self._decode(self.params, cache,
+                                         jnp.asarray(cur[:, None]))
+            cur = sample(logits)
+            steps += 1
+            for i, r in enumerate(reqs):
+                if not done[i]:
+                    outs[i].append(int(cur[i]))
+                    done[i] = (len(outs[i]) >= r.max_new_tokens
+                               or (r.eos_id is not None
+                                   and outs[i][-1] == r.eos_id))
         for r, o in zip(reqs, outs):
             r.out_tokens = o
         return reqs
-
-    def _sample(self, logits, reqs) -> np.ndarray:
-        lg = np.asarray(logits[:, -1, :], np.float32)
-        toks = np.empty((len(reqs), 1), np.int32)
-        for i, r in enumerate(reqs):
-            if r.temperature <= 0:
-                toks[i, 0] = int(np.argmax(lg[i]))
-            else:
-                p = np.exp((lg[i] - lg[i].max()) / r.temperature)
-                p /= p.sum()
-                toks[i, 0] = int(self.rng.choice(len(p), p=p))
-        return toks

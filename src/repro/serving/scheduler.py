@@ -1,0 +1,261 @@
+"""Continuous-batching scheduler: request queue, slot table, mid-decode
+admission, per-slot decode state, on-device sampling.
+
+The serving analogue of the paper's headline property (the M4BRAM computes
+while remaining fully usable as memory): the decode batch keeps computing
+while individual slots are drained and refilled — no global barrier
+between "batches" ever exists.
+
+Design:
+  * ``max_batch`` decode slots. The jitted decode step always runs the
+    full ``(max_batch, 1)`` token batch — ONE compiled decode signature
+    for the scheduler's whole lifetime; slot occupancy changes, shapes
+    never do. Free slots decode a dummy token whose output is discarded.
+  * Admission: a waiting request is prefilled solo (B=1, prompt bucketed),
+    and its KV / recurrent / RWKV state is scattered into the freed batch
+    row (``kv_cache.scatter_into_slot``). Only that row changes, so
+    requests join mid-decode without perturbing live slots — a request's
+    greedy output is bit-identical whether it is served solo, in a static
+    batch, or admitted while other slots are deep into their decodes.
+  * Per-slot decode state: ``DecodeCache.pos``/``KVCache.slot_pos``/
+    ``length`` all carry a batch axis; each slot's position advances
+    independently of its neighbours.
+  * Retirement: per-request ``max_new_tokens`` or EOS frees the slot; the
+    next waiting request is admitted on the same scheduler step.
+  * Sampling: vectorized on-device greedy / temperature / top-k with
+    per-slot parameters and per-request ``(seed, rid)``-derived PRNG
+    streams (``repro.serving.sampling``).
+
+Driving it: ``submit()`` + ``step()`` give deterministic single-step
+control (tests, custom loops); ``run()`` drains a workload, honouring
+each request's ``arrival_time`` against the wall clock (staggered /
+Poisson arrivals for the continuous-serving benchmark).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy, as_policy
+from repro.core.quant import QuantConfig
+from repro.core.quantized_linear import quantize_params_for_serving
+from repro.models import build_model
+from repro.models.kv_cache import scatter_into_slot
+from repro.serving import sampling
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``arrival_time`` is seconds relative to the start of ``run()`` (0 =
+    already queued). ``on_token`` streams tokens as they are sampled.
+    ``t_first`` / ``t_done`` are filled by the scheduler (seconds since the
+    run started) for latency accounting."""
+
+    rid: int
+    prompt: np.ndarray            # (T,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0                # 0 = no top-k filtering
+    eos_id: Optional[int] = None
+    arrival_time: float = 0.0
+    on_token: Optional[Callable[["Request", int], None]] = None
+    out_tokens: Optional[List[int]] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class ContinuousScheduler:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 8,
+        max_ctx: int = 128,
+        quant: Union[None, QuantConfig, PrecisionPolicy] = None,
+        bucket: int = 64,
+        seed: int = 0,
+        on_token: Optional[Callable[[Request, int], None]] = None,
+    ):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        policy = as_policy(quant)
+        if policy is not None:
+            params = quantize_params_for_serving(params, policy,
+                                                 min_size=1024)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_ctx = max_ctx
+        self.bucket = bucket
+        self.seed = seed
+        self.on_token = on_token
+
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._scatter = jax.jit(scatter_into_slot, donate_argnums=(0,))
+        self._prefill_cache = {}
+
+        # Fixed-shape decode state: allocated once, reused for the whole
+        # scheduler lifetime (the one compiled decode signature).
+        self.cache = self.model.init_cache(max_batch, max_ctx)
+        kv = self.cache.kv
+        # Full-attention caches bound the absolute positions a slot can
+        # reach; ring buffers and recurrent states are position-unbounded.
+        self._capacity = (
+            kv.k.shape[2] if kv is not None and kv.window == 0 else None
+        )
+
+        B = max_batch
+        self._cur = np.zeros((B, 1), np.int32)       # next input token/slot
+        self._temps = np.zeros((B,), np.float32)
+        self._top_ks = np.zeros((B,), np.int32)
+        self._keys = np.zeros((B, 2), np.uint32)
+        self._steps = np.zeros((B,), np.int32)       # per-request token ctr
+        self._slots: List[Optional[Request]] = [None] * B
+        self.waiting: Deque[Request] = collections.deque()
+        self.steps_run = 0
+        self.tokens_emitted = 0
+        self._t0: Optional[float] = None             # set by run()
+
+    # -- queue/slot accounting ---------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    @property
+    def num_waiting(self) -> int:
+        return len(self.waiting)
+
+    def submit(self, req: Request) -> None:
+        """Queue a request for admission into the next free slot."""
+        self.waiting.append(req)
+
+    def _bucketed(self, n: int) -> int:
+        return max(self.bucket, -(-n // self.bucket) * self.bucket)
+
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_cache:
+            self._prefill_cache[length] = jax.jit(self.model.prefill)
+        return self._prefill_cache[length]
+
+    def _now(self) -> Optional[float]:
+        return None if self._t0 is None else time.perf_counter() - self._t0
+
+    # -- admission / retirement --------------------------------------------
+
+    def _admit(self, req: Request, slot: int) -> Optional[Request]:
+        """Prefill `req` solo and scatter its state into batch row `slot`.
+        Returns the request if it finished on its very first token."""
+        L = self._bucketed(len(req.prompt))
+        if self._capacity is not None and L + req.max_new_tokens > self._capacity:
+            raise ValueError(
+                f"request {req.rid}: bucketed prompt ({L}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds cache capacity "
+                f"({self._capacity}); raise max_ctx"
+            )
+        tokens = np.zeros((1, L), np.int32)
+        tokens[0, L - len(req.prompt):] = req.prompt  # left-pad
+        solo, logits = self._prefill_fn(L)(self.params,
+                                           {"tokens": jnp.asarray(tokens)})
+        self.cache = self._scatter(self.cache, solo, slot)
+
+        key = sampling.request_key(self.seed, req.rid)
+        tok = int(np.asarray(sampling.sample_tokens(
+            logits[:, -1, :],
+            np.asarray([req.temperature], np.float32),
+            np.asarray([req.top_k], np.int32),
+            key[None],
+            np.zeros((1,), np.int32),
+        ))[0])
+        self._cur[slot, 0] = tok
+        self._temps[slot] = req.temperature
+        self._top_ks[slot] = req.top_k
+        self._keys[slot] = key
+        self._steps[slot] = 1
+        self._slots[slot] = req
+        req.out_tokens = [tok]
+        if req.t_first is None:
+            req.t_first = self._now()
+        self._emit(req, tok)
+        if self._finished(req, tok):
+            self._slots[slot] = None
+            return req
+        return None
+
+    def _emit(self, req: Request, tok: int) -> None:
+        self.tokens_emitted += 1
+        if req.on_token is not None:
+            req.on_token(req, tok)
+        if self.on_token is not None:
+            self.on_token(req, tok)
+
+    @staticmethod
+    def _finished(req: Request, tok: int) -> bool:
+        return (len(req.out_tokens) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id))
+
+    # -- the decode loop ----------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """One scheduler step: admit waiting requests into free slots, run
+        one batched decode step, sample, retire finished slots. Returns
+        the requests that finished this step."""
+        finished: List[Request] = []
+        for b in range(self.max_batch):
+            if self._slots[b] is None and self.waiting:
+                done = self._admit(self.waiting.popleft(), b)
+                if done is not None:
+                    finished.append(done)
+        if self.num_active == 0:
+            return finished
+
+        self.cache, logits = self._decode(self.params, self.cache,
+                                          jnp.asarray(self._cur))
+        toks = np.asarray(sampling.sample_tokens(
+            logits[:, -1, :], self._temps, self._top_ks,
+            self._keys, self._steps,
+        ))
+        self._steps += 1
+        self.steps_run += 1
+        for b, req in enumerate(self._slots):
+            if req is None:
+                continue
+            tok = int(toks[b])
+            req.out_tokens.append(tok)
+            self._emit(req, tok)
+            if self._finished(req, tok):
+                self._slots[b] = None
+                finished.append(req)
+            else:
+                self._cur[b, 0] = tok
+        return finished
+
+    def run(self, requests=()) -> List[Request]:
+        """Serve a workload to completion, admitting each request no
+        earlier than its ``arrival_time`` (seconds from now). Returns the
+        requests in completion order with ``t_first``/``t_done`` filled."""
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        self._t0 = time.perf_counter()
+        done: List[Request] = []
+        while pending or self.waiting or self.num_active:
+            now = time.perf_counter() - self._t0
+            while pending and pending[0].arrival_time <= now:
+                self.submit(pending.pop(0))
+            if not self.waiting and self.num_active == 0:
+                # Idle: sleep up to the next arrival.
+                time.sleep(min(max(pending[0].arrival_time - now, 0.0), 0.05))
+                continue
+            for req in self.step():
+                req.t_done = time.perf_counter() - self._t0
+                done.append(req)
+        self._t0 = None
+        return done
