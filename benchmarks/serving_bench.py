@@ -1,4 +1,5 @@
-"""Static vs continuous-batching serving benchmark.
+"""Static vs continuous-batching serving benchmark + paged-pool
+utilization.
 
 For each arrival rate, the same mixed-length workload (short and long
 prompts, short and long outputs) is served two ways:
@@ -7,8 +8,15 @@ prompts, short and long outputs) is served two ways:
     classic static batch (`ServingEngine.generate_static`): every request
     in a batch waits for the slowest one, and queued requests wait for the
     whole batch to drain.
-  * continuous — `ContinuousScheduler`: a request is admitted the moment
-    a slot frees mid-decode and retires at its own max_new/EOS.
+  * continuous — `ContinuousScheduler` over the paged block-pool KV cache:
+    a request is admitted the moment a slot frees mid-decode and retires
+    at its own max_new/EOS; KV blocks are committed per actual footprint.
+
+Each continuous row carries a pool_utilization column (peak paged
+resident KV bytes vs the contiguous per-slot reservation), and a separate
+overcommit section serves a workload through a pool smaller than the
+summed contiguous `max_ctx` reservations of its concurrently-live
+requests — with outputs bit-identical to the contiguous scheduler's.
 
 Reports per-mode throughput and mean/p90 request latency (completion −
 arrival, wall clock) and writes BENCH_serving.json at the repo root.
@@ -90,6 +98,48 @@ def _stats(done, wall):
     }
 
 
+def _pool_overcommit(cfg, params, quick: bool) -> dict:
+    """Serve a workload through a paged pool smaller than the summed
+    contiguous max_ctx reservations of its concurrently-live requests,
+    and check bit-identity against the contiguous scheduler."""
+    from repro.serving import ContinuousScheduler
+
+    max_batch, max_ctx, bs = 4, 64, 4
+    pool_blocks = 10  # 40 pooled tokens << 4 slots * 64 reserved tokens
+    n = 4 if quick else 8
+
+    def workload():
+        return _requests(np.random.default_rng(11), n, cfg.vocab, 0.0)
+
+    contig = ContinuousScheduler(cfg, params, max_batch=max_batch,
+                                 max_ctx=max_ctx, bucket=8, paged=False)
+    contig_done = {r.rid: r.out_tokens for r in contig.run(workload())}
+
+    sched = ContinuousScheduler(cfg, params, max_batch=max_batch,
+                                max_ctx=max_ctx, bucket=8, paged=True,
+                                block_size=bs, pool_blocks=pool_blocks)
+    reqs = workload()
+    for r in reqs:
+        sched.submit(r)
+    peak_active = 0
+    while sched.num_active or sched.num_waiting:
+        sched.step()
+        peak_active = max(peak_active, sched.num_active)
+    stats = sched.pool_stats()
+    identical = all(r.out_tokens == contig_done[r.rid] for r in reqs)
+    return {
+        "note": ("paged pool admits concurrent requests whose summed "
+                 "contiguous max_ctx reservations exceed the pool"),
+        "pool_capacity_tokens": stats["capacity_tokens"],
+        "peak_concurrent_requests": peak_active,
+        "peak_concurrent_max_ctx_reservation_tokens": peak_active * max_ctx,
+        "overcommitted": peak_active * max_ctx > stats["capacity_tokens"],
+        "peak_resident_kv_bytes": stats["peak_resident_kv_bytes"],
+        "contiguous_reserved_kv_bytes": stats["reserved_kv_bytes"],
+        "bit_identical_to_contiguous": identical,
+    }
+
+
 def run(quick: bool = False) -> dict:
     from repro.configs import get_reduced_config
     from repro.models import build_model
@@ -119,6 +169,8 @@ def run(quick: bool = False) -> dict:
                              ("continuous", _run_continuous)):
             rng = np.random.default_rng(7)  # same workload per mode
             reqs = _requests(rng, n, cfg.vocab, rate)
+            if mode == "continuous":
+                eng.scheduler().reset_pool_peak()
             done, wall = runner(eng, reqs)
             st = _stats(done, wall)
             row[mode] = st
@@ -127,10 +179,24 @@ def run(quick: bool = False) -> dict:
                  f"mean_latency_ms={st['mean_latency_ms']} "
                  f"tok_per_s={st['tok_per_s']}")
             results[f"{mode}_rate_{tag}"] = st["mean_latency_ms"]
+        stats = eng.pool_stats()
+        if stats and stats.get("paged"):
+            row["pool_utilization"] = {
+                "paged_peak_resident_kv_bytes":
+                    stats["peak_resident_kv_bytes"],
+                "contiguous_resident_kv_bytes": stats["reserved_kv_bytes"],
+                "block_size": stats["block_size"],
+            }
         row["latency_speedup"] = round(
             row["static"]["mean_latency_ms"]
             / max(row["continuous"]["mean_latency_ms"], 1e-9), 2)
         rows.append(row)
+
+    pool = _pool_overcommit(cfg, params, quick)
+    results["pool_overcommitted"] = pool["overcommitted"]
+    results["pool_bit_identical"] = pool["bit_identical_to_contiguous"]
+    assert pool["bit_identical_to_contiguous"], \
+        "paged outputs diverged from contiguous"
 
     if quick:
         # CI smoke: don't overwrite the committed full-sweep artifact.
@@ -138,10 +204,12 @@ def run(quick: bool = False) -> dict:
     bench_path = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
     bench_path.write_text(json.dumps({
         "note": ("reduced olmo-1b on CPU; static = batched generate with "
-                 "early exit, continuous = slot scheduler with mid-decode "
-                 "admission; latency is completion - arrival (wall clock)"),
+                 "early exit, continuous = paged-KV slot scheduler with "
+                 "mid-decode admission; latency is completion - arrival "
+                 "(wall clock)"),
         "config": {"max_batch": max_batch, "requests": n},
         "rows": rows,
+        "pool_overcommit": pool,
     }, indent=2) + "\n")
     return results
 

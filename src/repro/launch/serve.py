@@ -16,6 +16,13 @@ Poisson-ish staggered arrivals at --rate requests/s (0 = all at once);
 --static keeps the classic static batch. Either way the driver runs one
 warmup pass first, so steady-state throughput (what the hardware does)
 and total throughput (including compile) are reported separately.
+
+Full-attention archs serve from the paged block-pool KV cache by default:
+--block-size sets the pool granularity, --pool-blocks caps the shared
+pool (defaults to the contiguous worst case; set it lower to overcommit —
+admission then queues on actual free blocks), --no-paged forces the
+contiguous per-slot max_ctx reservation. Pool utilization is reported
+after a continuous run.
 """
 import argparse
 
@@ -44,6 +51,13 @@ def main():
     ap.add_argument("--rate", type=float, default=0.0,
                     help="continuous mode: Poisson arrival rate in "
                          "requests/s (0 = all requests queued at t=0)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV cache block size (tokens per block)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="shared KV pool size in blocks (default: the "
+                         "contiguous worst case max_batch * max_ctx)")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="force the contiguous per-slot KV reservation")
     args = ap.parse_args()
 
     if args.quant and args.policy:
@@ -94,7 +108,10 @@ def main():
 
         quant = _parse_quant(args.quant)
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
-                           quant=quant, bucket=32)
+                           quant=quant, bucket=32,
+                           paged=False if args.no_paged else None,
+                           block_size=args.block_size,
+                           pool_blocks=args.pool_blocks)
 
     rng = np.random.default_rng(0)
 
@@ -134,6 +151,18 @@ def main():
         lat = [r.t_done - r.arrival_time for r in done if r.t_done is not None]
         print(f"  mean request latency: {np.mean(lat)*1e3:.0f} ms "
               f"(rate={args.rate or 'inf'}/s)")
+        stats = engine.pool_stats()
+        if stats and stats.get("paged"):
+            print(f"  paged KV pool: {stats['peak_allocated_blocks']}/"
+                  f"{stats['pool_blocks']} blocks peak "
+                  f"(block_size={stats['block_size']}) — peak resident "
+                  f"{stats['peak_resident_kv_bytes']/1e6:.2f} MB vs "
+                  f"{stats['reserved_kv_bytes']/1e6:.2f} MB contiguous "
+                  "reservation")
+        elif stats:
+            print(f"  contiguous KV cache: "
+                  f"{stats['resident_kv_bytes']/1e6:.2f} MB resident "
+                  "(full per-slot reservation)")
     print(f"  quant={args.policy or args.quant or 'off'} "
           f"kv_int8={args.kv_int8}")
     for r in sorted(done, key=lambda r: r.rid)[:4]:

@@ -351,6 +351,15 @@ def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
     return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
 
 
+def last_token_slice(x: jax.Array, lengths) -> jax.Array:
+    """(B, T, d) → (B, 1, d) at the last *real* token per row: T-1 when
+    `lengths` is None, lengths-1 for right-padded serving batches."""
+    if lengths is None:
+        return x[:, -1:]
+    idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+    return jnp.take_along_axis(x, jnp.maximum(idx, 0), axis=1)
+
+
 def embed_lookup(table: jax.Array, ids: jax.Array, scale: bool = False) -> jax.Array:
     out = jnp.take(table, ids, axis=0)
     if scale:

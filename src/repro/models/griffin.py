@@ -149,9 +149,13 @@ def _rglru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array]):
 
 
 def rec_mix_apply(mix: dict, cfg: ModelConfig, x: jax.Array,
-                  rec: Optional[Tuple[jax.Array, jax.Array]] = None):
+                  rec: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  lengths: Optional[jax.Array] = None):
     """Full-seq recurrent temporal mix. x: (B, T, d) normalized.
-    rec: optional (h0 (B, W), conv_tail (B, cw-1, W)).
+    rec: optional (h0 (B, W), conv_tail (B, cw-1, W)); lengths: optional
+    per-row real-token counts for right-padded serving prompts — the
+    recurrence is causal, so carrying out the state at lengths-1 makes a
+    bucketed prefill exact (trailing pads never touch the carried state).
     Returns (out, (h_last, conv_tail_new))."""
     gate = jax.nn.gelu(cm.linear(x, mix["rg_gate"], cfg.quant,
                                  "fake" if cfg.quant else "none"), approximate=True)
@@ -164,10 +168,22 @@ def rec_mix_apply(mix: dict, cfg: ModelConfig, x: jax.Array,
     out = cm.linear((h.astype(x.dtype) * gate), mix["rg_out"], cfg.quant,
                     "fake" if cfg.quant else "none")
     cw = mix["conv_w"].shape[0]
-    new_tail = a_in[:, -(cw - 1):, :] if a_in.shape[1] >= cw - 1 else jnp.pad(
-        a_in, ((0, 0), (cw - 1 - a_in.shape[1], 0), (0, 0))
+    B, T, W = a_in.shape
+    # Conv tail = the cw-1 inputs before position `length` (zero history
+    # when the sequence is shorter than the conv support).
+    ext = jnp.concatenate(
+        [jnp.zeros((B, cw - 1, W), a_in.dtype), a_in], axis=1
     )
-    return out, (h[:, -1], new_tail)
+    if lengths is None:
+        h_last = h[:, -1]
+        new_tail = ext[:, T : T + cw - 1]
+    else:
+        idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+        h_last = jnp.take_along_axis(h, jnp.maximum(idx, 0), axis=1)[:, 0]
+        new_tail = jax.vmap(
+            lambda e, n: jax.lax.dynamic_slice_in_dim(e, n, cw - 1, axis=0)
+        )(ext, lengths.astype(jnp.int32))
+    return out, (h_last, new_tail)
 
 
 def rec_mix_step(mix: dict, cfg: ModelConfig, x: jax.Array, h0, conv_tail):
@@ -204,12 +220,12 @@ def _attn_apply(mix, cfg, x, positions):
 
 
 def layer_apply(lp: dict, kind: str, cfg: ModelConfig, x, positions,
-                rec_state=None):
+                rec_state=None, lengths=None):
     """Full-seq layer. Returns (x, mix_state) where mix_state is
     (h, conv_tail) for rglru or (k, v) for attn."""
     h = cm.apply_norm(x, lp["ln1"], cfg.norm)
     if kind == "rglru":
-        out, state = rec_mix_apply(lp["mix"], cfg, h, rec_state)
+        out, state = rec_mix_apply(lp["mix"], cfg, h, rec_state, lengths)
     else:
         out, k, v = _attn_apply(lp["mix"], cfg, h, positions)
         state = (k, v)
@@ -228,7 +244,7 @@ def _pattern(cfg: ModelConfig):
     return cfg.block_pattern or ("rglru", "rglru", "attn")
 
 
-def _forward(params, cfg: ModelConfig, tokens, collect: bool):
+def _forward(params, cfg: ModelConfig, tokens, collect: bool, lengths=None):
     pattern = _pattern(cfg)
     B, T = tokens.shape
     x = cm.embed_lookup(params["embed"], tokens, scale=True)
@@ -239,7 +255,8 @@ def _forward(params, cfg: ModelConfig, tokens, collect: bool):
         xc = carry
         states = {}
         for i, kind in enumerate(pattern):
-            xc, st = layer_apply(gp[f"l{i}_{kind}"], kind, cfg, xc, positions)
+            xc, st = layer_apply(gp[f"l{i}_{kind}"], kind, cfg, xc, positions,
+                                 lengths=lengths)
             if collect:
                 states[f"l{i}_{kind}"] = st
         return xc, states if collect else None
@@ -251,7 +268,7 @@ def _forward(params, cfg: ModelConfig, tokens, collect: bool):
     if "rem" in params:
         for name, lp in params["rem"].items():
             kind = name.split("_", 1)[1]
-            x, st = layer_apply(lp, kind, cfg, x, positions)
+            x, st = layer_apply(lp, kind, cfg, x, positions, lengths=lengths)
             if collect:
                 rstates[name] = st
     hidden = cm.apply_norm(x, params["final_norm"], cfg.norm)
@@ -266,7 +283,8 @@ def train_loss(params, cfg: ModelConfig, batch):
     return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
 
 
-def _pack_cache(cfg: ModelConfig, states, B: int, S: int) -> DecodeCache:
+def _pack_cache(cfg: ModelConfig, states, B: int, S: int,
+                lengths=None) -> DecodeCache:
     """Convert per-group collected states into stacked decode caches."""
     gstates, rstates = states
     pattern = _pattern(cfg)
@@ -310,24 +328,30 @@ def _pack_cache(cfg: ModelConfig, states, B: int, S: int) -> DecodeCache:
     v_cat = jnp.concatenate(vs_list, 0)
     from repro.models.kv_cache import ring_align
 
-    k_all = k_cat[:, :, -w:] if k_cat.shape[2] > w else k_cat
-    v_all = v_cat[:, :, -w:] if v_cat.shape[2] > w else v_cat
-    k_all, v_all, slot_pos = ring_align(k_all, v_all, S, w)
+    k_all, v_all, slot_pos = ring_align(k_cat, v_cat, lengths, w)
 
+    length = jnp.full((B,), S, jnp.int32) if lengths is None else (
+        lengths.astype(jnp.int32))
     rec = RecurrentState(h=hs, conv_tail=tails)
     kv = KVCache(
-        k=k_all, v=v_all, slot_pos=slot_pos,
-        length=jnp.full((B,), S, jnp.int32), window=w,
+        k=k_all, v=v_all, slot_pos=slot_pos, length=length, window=w,
     )
-    return DecodeCache(pos=jnp.full((B,), S, jnp.int32), kv=kv, rec=rec)
+    return DecodeCache(pos=length, kv=kv, rec=rec)
 
 
 def prefill(params, cfg: ModelConfig, batch):
+    """``batch["lengths"]`` (B,) marks right-padded serving prompts; the
+    carried recurrent state, conv tails, attention ring and logits are all
+    taken at the per-row last real token, so bucketed prefill is exact."""
     tokens = batch["tokens"]
     B, S = tokens.shape
-    hidden, states = _forward(params, cfg, tokens, True)
-    logits = cm.logits_head(hidden[:, -1:], params["head"])
-    return _pack_cache(cfg, states, B, S), logits
+    lengths = batch.get("lengths")
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+    hidden, states = _forward(params, cfg, tokens, True, lengths)
+    logits = cm.logits_head(cm.last_token_slice(hidden, lengths),
+                            params["head"])
+    return _pack_cache(cfg, states, B, S, lengths), logits
 
 
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens):

@@ -87,35 +87,49 @@ def quantize_kv(x: jax.Array):
     return codes.astype(jnp.int8), scale
 
 
-def ring_align(k_last, v_last, S: int, window: int):
-    """Align prefill K/V (last min(S, window) positions in sequence order,
-    layer-stacked: (L, B, s, NKV, H)) to the ring-buffer invariant used by
-    cache_write: position p lives at slot p % ring_size.
+def ring_align(k_full, v_full, lengths, window: int):
+    """Pack full-sequence prefill K/V (L, B, S, NKV, H) into the ring-buffer
+    invariant used by cache_write: position p lives at slot p % window.
 
-    Returns (k, v, slot_pos (L, B, ring)) with ring = window (padded when
-    S < window; rolled by S % window when S > window so array index and
-    slot agree)."""
-    import jax.numpy as jnp
+    `lengths` is the per-row count of real (right-padded) tokens, or None
+    for "every row is full length S". Each row keeps its own last
+    min(length, window) positions; empty ring slots carry slot_pos = -1
+    (their values are never read — decode_attention masks them).
 
-    L, B = k_last.shape[0], k_last.shape[1]
-    s = k_last.shape[2]
-    if S <= window:
-        pad = window - s
-        if pad:
-            zk = jnp.zeros((*k_last.shape[:2], pad, *k_last.shape[3:]), k_last.dtype)
-            k_last = jnp.concatenate([k_last, zk], axis=2)
-            v_last = jnp.concatenate([v_last, zk], axis=2)
-        slot_pos = jnp.concatenate(
-            [jnp.arange(s, dtype=jnp.int32),
-             jnp.full((pad,), -1, jnp.int32)]
-        )
+    Returns (k (L, B, window, NKV, H), v, slot_pos (L, B, window))."""
+    L, B, S = k_full.shape[:3]
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    B = max(B, lengths.shape[0])  # degenerate layer stacks keep batch = 1
+    r = jnp.arange(window, dtype=jnp.int32)
+    base = jnp.maximum(lengths - window, 0)[:, None]        # (B, 1)
+    # p[b, r]: the absolute position living in ring slot r of row b —
+    # the unique p in [len-window, len) with p % window == r.
+    p = base + jnp.mod(r[None, :] - base, window)           # (B, window)
+    valid = p < lengths[:, None]
+    idx = jnp.minimum(p, S - 1)[None, :, :, None, None]     # clip for gather
+
+    def gather(a):
+        return jnp.take_along_axis(a, idx.astype(jnp.int32), axis=2)
+
+    slot_pos = jnp.where(valid, p, -1)
+    return gather(k_full), gather(v_full), jnp.broadcast_to(
+        slot_pos[None], (L, B, window)
+    )
+
+
+def full_slot_pos(layers: int, batch: int, size: int, lengths) -> jax.Array:
+    """slot_pos (layers, batch, size) for a full (non-ring) cache where
+    array slot == absolute position. Slots at or beyond the per-row length
+    (right-pad slots, decode headroom) are marked empty (-1)."""
+    s = jnp.arange(size, dtype=jnp.int32)
+    if lengths is None:
+        sp = jnp.broadcast_to(s, (batch, size))
     else:
-        shift = S % window
-        k_last = jnp.roll(k_last, shift, axis=2)
-        v_last = jnp.roll(v_last, shift, axis=2)
-        kept = jnp.arange(S - window, S, dtype=jnp.int32)
-        slot_pos = jnp.zeros((window,), jnp.int32).at[kept % window].set(kept)
-    return k_last, v_last, jnp.broadcast_to(slot_pos, (L, B, window))
+        sp = jnp.where(s[None, :] < lengths[:, None].astype(jnp.int32),
+                       s[None, :], -1)
+    return jnp.broadcast_to(sp[None], (layers, batch, size))
 
 
 def write_slot(pos, size, window: int):
@@ -147,6 +161,107 @@ def cache_write(k_cache, v_cache, slot_pos, k_new, v_new, pos, window: int):
     v_cache = row_write(v_cache, v_new, slot)
     slot_pos = row_write(slot_pos, pos[:, None].astype(jnp.int32), slot)
     return k_cache, v_cache, slot_pos
+
+
+# --------------------------------------------------------------------------
+# Paged KV cache: shared block pool + per-slot block tables
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block-pool KV cache for full-attention decode (the serving analogue
+    of the paper's utilization argument: capacity is sized for the *actual*
+    resident tokens, not a worst-case per-slot reservation).
+
+    k/v: (L, num_blocks, block_size, NKV, H) — one pool shared by every
+    batch slot. block_table: (B, max_blocks) int32 maps a row's virtual
+    block j (covering absolute positions [j·bs, (j+1)·bs)) to a pool block;
+    -1 = unallocated. Pool block 0 is a reserved trash block: writes from
+    free slots and unallocated virtual blocks land there and are never
+    read. length: (B,) tokens written per row.
+
+    Absolute position p of row b resolves to
+    (block_table[b, p // block_size], p % block_size); gathering a row's
+    blocks in table order therefore reproduces the contiguous layout slot
+    == position, which is what makes the paged path bit-identical to the
+    contiguous one."""
+
+    k: jax.Array
+    v: jax.Array
+    block_table: jax.Array
+    length: jax.Array
+    block_size: int = 16
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.block_table, self.length), (self.block_size,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, block_size=aux[0])
+
+    @property
+    def quantized(self) -> bool:
+        return False
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def blocks_per_row(self) -> int:
+        return self.block_table.shape[1]
+
+    @staticmethod
+    def init(layers: int, batch: int, num_blocks: int, block_size: int,
+             max_blocks: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16) -> "PagedKVCache":
+        return PagedKVCache(
+            k=jnp.zeros((layers, num_blocks, block_size, n_kv, head_dim), dtype),
+            v=jnp.zeros((layers, num_blocks, block_size, n_kv, head_dim), dtype),
+            block_table=jnp.full((batch, max_blocks), -1, jnp.int32),
+            length=jnp.zeros((batch,), jnp.int32),
+            block_size=block_size,
+        )
+
+
+def paged_slot(block_table, pos, block_size: int):
+    """Resolve per-row absolute positions `pos` (B,) to (pool block (B,),
+    in-block offset (B,)). Unallocated virtual blocks (and free slots,
+    whose tables are all -1) resolve to the trash block 0."""
+    idx = jnp.clip(pos // block_size, 0, block_table.shape[1] - 1)
+    blk = jnp.take_along_axis(block_table, idx[:, None].astype(jnp.int32),
+                              axis=1)[:, 0]
+    return jnp.maximum(blk, 0), pos % block_size
+
+
+def paged_cache_write(pool_k, pool_v, block_table, k_new, v_new, pos,
+                      block_size: int):
+    """Write one token's k/v (B, 1, NKV, H) into a single layer's pool
+    (num_blocks, block_size, NKV, H) at per-row positions `pos` (B,).
+    Live rows own disjoint blocks; free rows all write the trash block."""
+    blk, off = paged_slot(block_table, pos, block_size)
+    pool_k = pool_k.at[blk, off].set(k_new[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[blk, off].set(v_new[:, 0].astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
+def paged_gather(pool_k, pool_v, block_table):
+    """Gather each row's blocks in table order from a single layer's pool:
+    returns (k (B, S, NKV, H), v, kpos (B, S)) with S = max_blocks ·
+    block_size and kpos[b, p] = p where row b's virtual block p // bs is
+    allocated, -1 elsewhere — the exact (values, positions) layout of the
+    contiguous cache, ready for decode_attention."""
+    B, max_blocks = block_table.shape
+    bs = pool_k.shape[1]
+    tbl = jnp.maximum(block_table, 0)
+    k_rows = pool_k[tbl].reshape(B, max_blocks * bs, *pool_k.shape[2:])
+    v_rows = pool_v[tbl].reshape(B, max_blocks * bs, *pool_v.shape[2:])
+    virt = jnp.arange(max_blocks * bs, dtype=jnp.int32)
+    alloc = jnp.repeat(block_table >= 0, bs, axis=1)
+    kpos = jnp.where(alloc, virt[None, :], -1)
+    return k_rows, v_rows, kpos
 
 
 @jax.tree_util.register_pytree_node_class
@@ -279,3 +394,73 @@ def scatter_into_slot(batch: DecodeCache, solo: DecodeCache, slot) -> DecodeCach
             cm_shift=_write_row(batch.rwkv.cm_shift, solo.rwkv.cm_shift, slot),
         )
     return DecodeCache(pos=pos, kv=kv, rec=rec, rwkv=rwkv)
+
+
+def scatter_into_paged(batch: DecodeCache, solo: DecodeCache, slot,
+                       row_blocks) -> DecodeCache:
+    """Admit a solo-prefilled request into the paged pool. `solo` carries a
+    contiguous full cache (right-padded: array slot == absolute position);
+    its virtual block j goes to pool block row_blocks[j]. Entries past the
+    allocated prompt blocks are -1 and land in the trash block (they hold
+    only right-pad / headroom slots, which are empty anyway).
+
+    `slot` may be traced; `row_blocks` is the (max_blocks,) block-table row
+    the allocator filled for this request."""
+    kv: PagedKVCache = batch.kv
+    bs = kv.block_size
+    s_solo = solo.kv.k.shape[2]
+    nb = -(-s_solo // bs)
+    pad = nb * bs - s_solo
+
+    def as_blocks(a):
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 3))
+        return a[:, 0].reshape(a.shape[0], nb, bs, *a.shape[3:])
+
+    slot = jnp.asarray(slot, jnp.int32)
+    row_blocks = jnp.asarray(row_blocks, jnp.int32)
+    dst = jnp.maximum(
+        jnp.take(row_blocks, jnp.arange(nb), mode="fill", fill_value=-1), 0
+    )
+    k = kv.k.at[:, dst].set(as_blocks(solo.kv.k).astype(kv.k.dtype))
+    v = kv.v.at[:, dst].set(as_blocks(solo.kv.v).astype(kv.v.dtype))
+    table = jax.lax.dynamic_update_slice(
+        kv.block_table, row_blocks[None, : kv.blocks_per_row], (slot, 0)
+    )
+    length = jax.lax.dynamic_update_slice(
+        kv.length, solo.kv.length.astype(kv.length.dtype), (slot,)
+    )
+    pos = jax.lax.dynamic_update_slice(
+        batch.pos, solo.pos.astype(batch.pos.dtype), (slot,)
+    )
+    return DecodeCache(pos=pos, kv=PagedKVCache(
+        k=k, v=v, block_table=table, length=length, block_size=bs))
+
+
+def grow_cache(cache: DecodeCache, size: int) -> DecodeCache:
+    """Extend a full-attention contiguous cache's slot axis to at least
+    `size` empty slots (ring buffers and recurrent states are position-
+    unbounded and pass through untouched). This is what lets the static
+    engine decode past the prefill headroom instead of silently rewriting
+    the last slot via write_slot's clamp."""
+    kv = cache.kv
+    if kv is None or not isinstance(kv, KVCache) or kv.window:
+        return cache
+    cur = kv.k.shape[2]
+    if cur >= size:
+        return cache
+    pad = size - cur
+    zk = jnp.zeros((*kv.k.shape[:2], pad, *kv.k.shape[3:]), kv.k.dtype)
+    sp = jnp.full((*kv.slot_pos.shape[:2], pad), -1, jnp.int32)
+    ks = vs = None
+    if kv.quantized:
+        zs = jnp.zeros((*kv.k_scale.shape[:2], pad, *kv.k_scale.shape[3:]),
+                       kv.k_scale.dtype)
+        ks = jnp.concatenate([kv.k_scale, zs], axis=2)
+        vs = jnp.concatenate([kv.v_scale, jnp.copy(zs)], axis=2)
+    return dataclasses.replace(cache, kv=KVCache(
+        k=jnp.concatenate([kv.k, zk], axis=2),
+        v=jnp.concatenate([kv.v, jnp.copy(zk)], axis=2),
+        slot_pos=jnp.concatenate([kv.slot_pos, sp], axis=2),
+        length=kv.length, k_scale=ks, v_scale=vs, window=kv.window,
+    ))

@@ -55,11 +55,19 @@ def build_model(cfg: ModelConfig) -> SimpleNamespace:
     def smoke_batch(key, seq_len: int = 32, batch: int = 2):
         return make_smoke_batch(cfg, key, seq_len, batch)
 
-    return SimpleNamespace(
+    ns = SimpleNamespace(
         cfg=cfg, init=init, train_loss=train_loss, prefill=prefill,
         decode_step=decode_step, init_cache=init_cache,
         input_specs=input_specs, smoke_batch=smoke_batch,
     )
+    if hasattr(mod, "init_paged_cache"):
+        # Block-pool decode cache (full-attention transformer families).
+        ns.init_paged_cache = (
+            lambda batch, num_blocks, block_size, max_blocks:
+            mod.init_paged_cache(cfg, batch, num_blocks, block_size,
+                                 max_blocks)
+        )
+    return ns
 
 
 def make_input_specs(cfg: ModelConfig, shape: ShapeSpec):

@@ -165,9 +165,20 @@ def _group_norm(x: jax.Array, H: int, scale, bias, eps=1e-5) -> jax.Array:
     return out.astype(x.dtype)
 
 
+def _last_real(x: jax.Array, lengths) -> jax.Array:
+    """(B, T, d) → (B, d) at the per-row last real token (T-1 when
+    `lengths` is None)."""
+    return cm.last_token_slice(x, lengths)[:, 0]
+
+
 def time_mix(p: dict, cfg: ModelConfig, x: jax.Array, tail, wkv_state,
-             chunk: int = 64):
-    """x: (B, T, d) normalized input. Returns (out, new_tail, new_state)."""
+             chunk: int = 64, lengths=None):
+    """x: (B, T, d) normalized input. Returns (out, new_tail, new_state).
+
+    `lengths` marks right-padded serving prompts: pad positions contribute
+    k = 0 (no state injection) and decay w = 1 (no state decay), so the
+    carried wkv state after T steps equals the state after lengths real
+    steps exactly — bucketed prefill matches exact-length prefill."""
     B, T, d = x.shape
     H, K = _dims(cfg)
     tm = p
@@ -179,13 +190,17 @@ def time_mix(p: dict, cfg: ModelConfig, x: jax.Array, tail, wkv_state,
     v = (xv @ tm["w_value"].astype(x.dtype)).reshape(B, T, H, K)
     g = jax.nn.silu(xg @ tm["w_gate"].astype(x.dtype))
     w = _decay(tm, xw).reshape(B, T, H, K)
+    if lengths is not None:
+        real = (jnp.arange(T)[None, :] < lengths[:, None])[..., None, None]
+        k = jnp.where(real, k, 0)
+        w = jnp.where(real, w, 1.0)
     r = constrain(r, "batch", None, None, None)
     out, state = wkv6_chunked(r, k, v, w, tm["u"], wkv_state,
                               chunk=cfg.rwkv_chunk)
     out = out.reshape(B, T, d).astype(x.dtype)
     out = _group_norm(out, H, tm["gn_scale"], tm["gn_bias"]) * g
     out = out @ tm["w_out"].astype(x.dtype)
-    return out, x[:, -1, :], state
+    return out, _last_real(x, lengths), state
 
 
 def time_mix_step(p, cfg, x, tail, wkv_state):
@@ -207,7 +222,7 @@ def time_mix_step(p, cfg, x, tail, wkv_state):
     return (out @ tm["w_out"].astype(x.dtype))[:, None, :], xt, state
 
 
-def channel_mix(p: dict, x: jax.Array, tail):
+def channel_mix(p: dict, x: jax.Array, tail, lengths=None):
     xx = _shift(x, tail)
     mu = p["mu"].astype(x.dtype)
     xk = x + (xx - x) * mu[0]
@@ -216,7 +231,7 @@ def channel_mix(p: dict, x: jax.Array, tail):
     out = jax.nn.sigmoid(xr @ p["w_recept"].astype(x.dtype)) * (
         kk @ p["w_value"].astype(x.dtype)
     )
-    return out, x[:, -1, :]
+    return out, _last_real(x, lengths)
 
 
 def channel_mix_step(p, x, tail):
@@ -236,7 +251,8 @@ def channel_mix_step(p, x, tail):
 # --------------------------------------------------------------------------
 
 
-def _forward(params, cfg: ModelConfig, tokens, state: RwkvState | None):
+def _forward(params, cfg: ModelConfig, tokens, state: RwkvState | None,
+             lengths=None):
     """Full-seq forward. Returns (hidden, final RwkvState stacked over L)."""
     B, T = tokens.shape
     H, K = _dims(cfg)
@@ -251,10 +267,11 @@ def _forward(params, cfg: ModelConfig, tokens, state: RwkvState | None):
         xc = carry
         bp, wkv0, tm_tail, cm_tail = layer_in
         h = cm.apply_norm(xc, bp["ln1"], "layernorm")
-        out, tm_tail2, wkv1 = time_mix(bp["tm"], cfg, h, tm_tail, wkv0)
+        out, tm_tail2, wkv1 = time_mix(bp["tm"], cfg, h, tm_tail, wkv0,
+                                       lengths=lengths)
         xc = xc + out
         h2 = cm.apply_norm(xc, bp["ln2"], "layernorm")
-        out2, cm_tail2 = channel_mix(bp["cmx"], h2, cm_tail)
+        out2, cm_tail2 = channel_mix(bp["cmx"], h2, cm_tail, lengths=lengths)
         xc = xc + out2
         xc = constrain(xc, "batch", None, None)
         return xc, (wkv1, tm_tail2, cm_tail2)
@@ -276,10 +293,19 @@ def train_loss(params, cfg: ModelConfig, batch):
 
 
 def prefill(params, cfg: ModelConfig, batch):
-    hidden, state = _forward(params, cfg, batch["tokens"], None)
-    logits = cm.logits_head(hidden[:, -1:], params["head"])
+    """``batch["lengths"]`` (B,) marks right-padded serving prompts: the
+    wkv state passes through pad steps untouched (k = 0, w = 1), shift
+    tails and logits come from the per-row last real token — bucketed
+    prefill is exact."""
     B, S = batch["tokens"].shape
-    return DecodeCache(pos=jnp.full((B,), S, jnp.int32), rwkv=state), logits
+    lengths = batch.get("lengths")
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+    hidden, state = _forward(params, cfg, batch["tokens"], None, lengths)
+    logits = cm.logits_head(cm.last_token_slice(hidden, lengths),
+                            params["head"])
+    pos = jnp.full((B,), S, jnp.int32) if lengths is None else lengths
+    return DecodeCache(pos=pos, rwkv=state), logits
 
 
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens):

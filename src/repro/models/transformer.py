@@ -18,7 +18,15 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import common as cm
 from repro.models import moe as moe_mod
-from repro.models.kv_cache import DecodeCache, KVCache, cache_write
+from repro.models.kv_cache import (
+    DecodeCache,
+    KVCache,
+    PagedKVCache,
+    cache_write,
+    full_slot_pos,
+    paged_cache_write,
+    paged_gather,
+)
 from repro.parallel.sharding import constrain
 
 
@@ -173,6 +181,12 @@ def block_decode(
         window=cfg.attn_window, softcap=cfg.attn_logit_softcap,
         k_scale=k_scale, v_scale=v_scale,
     )
+    x = _block_post_attn(p, cfg, x, attn)
+    return x, k_cache, v_cache, slot_pos, k_scale, v_scale
+
+
+def _block_post_attn(p: dict, cfg: ModelConfig, x, attn):
+    """Shared decode tail: output projection + FFN/MoE residual."""
     attn = attn.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)
     x = x + cm.linear(attn, p["wo"], cfg.quant, "fake" if cfg.quant else "none")
     h2 = cm.apply_norm(x, p["ln2"], cfg.norm)
@@ -180,7 +194,32 @@ def block_decode(
         y, _ = moe_mod.moe_apply_shardmap(p["moe"], h2, cfg)
     else:
         y = cm.ffn_apply(p["ffn"], h2, cfg)
-    return x + y, k_cache, v_cache, slot_pos, k_scale, v_scale
+    return x + y
+
+
+def block_decode_paged(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, 1, d)
+    pos: jax.Array,          # (B,) per-slot positions
+    pool_k, pool_v,          # (num_blocks, block_size, NKV, H)
+    block_table,             # (B, max_blocks)
+    block_size: int,
+):
+    """Single-token block against one layer's slice of the paged pool:
+    scatter the new k/v into pos's (block, offset), then gather the row's
+    blocks in table order — value/position layout identical to the
+    contiguous cache, so attention is bit-identical to block_decode."""
+    h = cm.apply_norm(x, p["ln1"], cfg.norm)
+    q, k, v = _attention_qkv(p, cfg, h, pos[:, None])
+    pool_k, pool_v = paged_cache_write(
+        pool_k, pool_v, block_table, k, v, pos, block_size
+    )
+    k_rows, v_rows, kpos = paged_gather(pool_k, pool_v, block_table)
+    attn = cm.decode_attention(
+        q, k_rows, v_rows, kpos, pos, softcap=cfg.attn_logit_softcap
+    )
+    return _block_post_attn(p, cfg, x, attn), pool_k, pool_v
 
 
 # --------------------------------------------------------------------------
@@ -284,32 +323,34 @@ def train_loss(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, dict]:
 
 
 def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
-    """Full-sequence forward; returns a DecodeCache and last-token logits."""
+    """Full-sequence forward; returns a DecodeCache and last-token logits.
+
+    ``batch["lengths"]`` (B,) marks right-padded serving prompts: row b's
+    real tokens sit at positions 0..lengths[b]-1 and trailing pad slots are
+    excluded from the cache (slot_pos = -1) and from the returned logits,
+    so a prompt bucketed up to any length prefills bit-identically to an
+    exact-length prefill (causal attention never looks at trailing pads)."""
     x, positions = embed_inputs(params, cfg, batch)
     B, S = x.shape[:2]
+    lengths = batch.get("lengths")
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
     x, _, kv = _scan_blocks(params, cfg, x, positions, _mask_for(cfg), True)
     k_all, v_all = kv  # (L, B, S, NKV, H)
     w = cfg.attn_window
     if w:
         from repro.models.kv_cache import ring_align
 
-        k_all = k_all[:, :, -w:] if S > w else k_all
-        v_all = v_all[:, :, -w:] if S > w else v_all
-        k_all, v_all, slot_pos = ring_align(k_all, v_all, S, w)
+        k_all, v_all, slot_pos = ring_align(k_all, v_all, lengths, w)
     else:
-        size = k_all.shape[2]
-        slot_pos = jnp.broadcast_to(jnp.arange(size, dtype=jnp.int32),
-                                    (cfg.num_layers, B, size))
-    if not w:
         # Full cache: leave headroom slots for tokens decoded next.
         pad = DECODE_HEADROOM
         zk = jnp.zeros((*k_all.shape[:2], pad, *k_all.shape[3:]), k_all.dtype)
         k_all = jnp.concatenate([k_all, zk], axis=2)
         v_all = jnp.concatenate([v_all, zk], axis=2)
-        slot_pos = jnp.concatenate(
-            [slot_pos, jnp.full((*slot_pos.shape[:2], pad), -1, jnp.int32)],
-            axis=2,
-        )
+        slot_pos = full_slot_pos(cfg.num_layers, B, S + pad,
+                                 jnp.full((B,), S, jnp.int32)
+                                 if lengths is None else lengths)
     if cfg.kv_cache_quant:
         from repro.models.kv_cache import quantize_kv
 
@@ -319,23 +360,28 @@ def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
         k_all = k_all.astype(_dtype(cfg))
         v_all = v_all.astype(_dtype(cfg))
         k_scale = v_scale = None
+    length = jnp.full((B,), S, jnp.int32) if lengths is None else lengths
     kvc = KVCache(
         k=k_all,
         v=v_all,
         slot_pos=slot_pos,
-        length=jnp.full((B,), S, jnp.int32),
+        length=length,
         k_scale=k_scale,
         v_scale=v_scale,
         window=w,
     )
-    hidden = cm.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    hidden = cm.apply_norm(cm.last_token_slice(x, lengths),
+                           params["final_norm"], cfg.norm)
     logits = compute_logits(params, cfg, hidden)
-    return DecodeCache(pos=jnp.full((B,), S, jnp.int32), kv=kvc), logits
+    return DecodeCache(pos=length, kv=kvc), logits
 
 
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array):
     """tokens: (B, 1) → (new_cache, logits (B, 1, V)). cache.pos is (B,):
-    each slot decodes at its own position (continuous batching)."""
+    each slot decodes at its own position (continuous batching). Dispatches
+    on the cache flavour: contiguous KVCache or block-table PagedKVCache."""
+    if isinstance(cache.kv, PagedKVCache):
+        return _decode_step_paged(params, cfg, cache, tokens)
     scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
     x = cm.embed_lookup(params["embed"], tokens, scale=scale)
     x = constrain(x, "batch", None, None)
@@ -371,6 +417,34 @@ def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array)
     return new_cache, logits
 
 
+def _decode_step_paged(params, cfg: ModelConfig, cache: DecodeCache, tokens):
+    """decode_step over the shared block pool: one compiled signature for
+    any mix of slot depths and block-table layouts."""
+    scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
+    x = cm.embed_lookup(params["embed"], tokens, scale=scale)
+    x = constrain(x, "batch", None, None)
+    pos = cache.pos
+    kv: PagedKVCache = cache.kv
+    table = kv.block_table
+
+    def body(xc, layer_in):
+        block_p, pk, pv = layer_in
+        xn, pk, pv = block_decode_paged(
+            block_p, cfg, xc, pos, pk, pv, table, kv.block_size
+        )
+        return xn, (pk, pv)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["blocks"], kv.k, kv.v))
+    hidden = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = compute_logits(params, cfg, hidden)
+    new_cache = DecodeCache(
+        pos=pos + 1,
+        kv=PagedKVCache(k=k_new, v=v_new, block_table=table,
+                        length=kv.length + 1, block_size=kv.block_size),
+    )
+    return new_cache, logits
+
+
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> DecodeCache:
     """Empty cache sized for decoding after `seq_len` tokens of context."""
     kvc = KVCache.init(
@@ -379,3 +453,21 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> DecodeCache:
         quantized=cfg.kv_cache_quant,
     )
     return DecodeCache(pos=jnp.full((batch,), seq_len, jnp.int32), kv=kvc)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, max_blocks: int) -> DecodeCache:
+    """Empty paged cache: `num_blocks` pool blocks (block 0 = trash) shared
+    by `batch` slots of up to `max_blocks` blocks each. Full causal
+    attention only — ring buffers are already window-bounded and the int8
+    cache keeps per-slot scales, so both stay contiguous."""
+    if cfg.attn_window:
+        raise ValueError("paged KV cache requires full attention "
+                         f"(attn_window={cfg.attn_window})")
+    if cfg.kv_cache_quant:
+        raise ValueError("paged KV cache does not support kv_cache_quant")
+    kvc = PagedKVCache.init(
+        cfg.num_layers, batch, num_blocks, block_size, max_blocks,
+        cfg.n_kv_heads, cfg.head_dim, dtype=_dtype(cfg),
+    )
+    return DecodeCache(pos=jnp.zeros((batch,), jnp.int32), kv=kvc)

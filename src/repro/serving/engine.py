@@ -8,16 +8,24 @@ execution modes:
 
   * `generate`     — continuous batching via `ContinuousScheduler`: one
     fixed compiled decode signature, solo prefill scattered into freed
-    slots mid-decode, per-slot EOS/max_new retirement, on-device sampling.
+    slots mid-decode, per-slot EOS/max_new retirement, on-device sampling,
+    and (for full-attention archs, by default) the paged block-pool KV
+    cache — admission is bounded by actual resident tokens, not a per-slot
+    `max_ctx` reservation.
   * `generate_static` — the classic static batch (batched prefill → decode
     loop, finished slots masked), kept as the baseline the serving
     benchmark measures continuous batching against. The decode loop exits
-    as soon as every sequence in the batch has finished.
+    as soon as every sequence in the batch has finished, and the cache is
+    grown past the prefill headroom when `max_new_tokens` needs it (an
+    overflowing decode used to silently rewrite the last cache slot via
+    `write_slot`'s clamp; now it either fits or raises when `max_ctx`
+    caps it).
 
-Greedy outputs are identical between the two modes when prompts bucket to
-the same prefill length; sampled outputs are too, because both paths draw
-from the same per-request (seed, rid, step) PRNG streams
-(`repro.serving.sampling`).
+Prompts are right-padded to the bucket with the real length passed to
+prefill, so pad tokens never occupy cache slots or shift rope positions:
+a request's greedy output is identical between the two modes and across
+bucket sizes. Sampled outputs are too, because both paths draw from the
+same per-request (seed, rid, step) PRNG streams (`repro.serving.sampling`).
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ from repro.core.precision import PrecisionPolicy, as_policy
 from repro.core.quant import QuantConfig
 from repro.core.quantized_linear import quantize_params_for_serving
 from repro.models import build_model
+from repro.models.kv_cache import KVCache, grow_cache
 from repro.serving import sampling
 from repro.serving.scheduler import ContinuousScheduler, Request  # noqa: F401
 
@@ -47,6 +56,9 @@ class ServingEngine:
         seed: int = 0,
         max_ctx: Optional[int] = None,
         on_token=None,
+        paged: Optional[bool] = None,
+        block_size: int = 16,
+        pool_blocks: Optional[int] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -60,6 +72,9 @@ class ServingEngine:
         self.seed = seed
         self.max_ctx = max_ctx
         self.on_token = on_token            # streamed-token callback
+        self.paged = paged                  # None = auto (paged if eligible)
+        self.block_size = block_size
+        self.pool_blocks = pool_blocks
         self._sched: Optional[ContinuousScheduler] = None
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
@@ -76,19 +91,31 @@ class ServingEngine:
 
     def scheduler(self, max_ctx: Optional[int] = None) -> ContinuousScheduler:
         """The engine's (lazily built) continuous scheduler. Rebuilt only
-        if a larger context bound is requested."""
-        need = max(max_ctx or 0, self.max_ctx or 0) or 128
+        if a larger context bound is requested. An explicit engine
+        `max_ctx` is a hard cap in both modes: the scheduler never grows
+        past it (requests beyond it come back failed, mirroring the
+        static path's ValueError guard)."""
+        if self.max_ctx is not None:
+            need = self.max_ctx
+        else:
+            need = max_ctx or 128
         if self._sched is None or need > self._sched.max_ctx:
             self._sched = ContinuousScheduler(
                 self.cfg, self.params, max_batch=self.max_batch,
                 max_ctx=need, quant=None, bucket=self.bucket, seed=self.seed,
-                on_token=self.on_token,
+                on_token=self.on_token, paged=self.paged,
+                block_size=self.block_size, pool_blocks=self.pool_blocks,
             )
         self._sched.on_token = self.on_token  # pick up late reassignment
         return self._sched
 
+    def pool_stats(self) -> Optional[dict]:
+        """KV-pool utilization of the continuous scheduler (None before
+        the first `generate`)."""
+        return self._sched.pool_stats() if self._sched is not None else None
+
     def _ctx_needed(self, requests: List[Request]) -> int:
-        return max(self._bucketed(len(r.prompt)) + r.max_new_tokens
+        return max(self._bucketed(len(r.prompt)) + max(r.max_new_tokens, 1)
                    for r in requests)
 
     def generate(self, requests: List[Request]) -> List[Request]:
@@ -111,14 +138,40 @@ class ServingEngine:
             out.extend(self._generate_batch(requests[i : i + self.max_batch]))
         return out
 
+    def _grown(self, cache, needed: int):
+        """Capacity guard + growth for the static full-attention cache:
+        refuse (don't silently ring-overwrite) when `max_ctx` caps the
+        batch, otherwise extend the cache to cover every decode write.
+        Growth is rounded to the bucket so the decode signature count
+        stays bounded."""
+        kv = cache.kv
+        if kv is None or not isinstance(kv, KVCache) or kv.window:
+            return cache
+        if self.max_ctx is not None and needed > self.max_ctx:
+            raise ValueError(
+                f"static batch writes {needed} cache slots but max_ctx is "
+                f"{self.max_ctx}; raise max_ctx or lower max_new_tokens"
+            )
+        if needed > kv.k.shape[2]:
+            cache = grow_cache(cache, -(-needed // self.bucket) * self.bucket)
+        return cache
+
     def _generate_batch(self, reqs: List[Request]) -> List[Request]:
         B = len(reqs)
-        L = self._bucketed(max(len(r.prompt) for r in reqs))
+        lens = [len(r.prompt) for r in reqs]
+        L = self._bucketed(max(lens))
         tokens = np.zeros((B, L), np.int32)
         for i, r in enumerate(reqs):
-            tokens[i, L - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(tokens)}
+            tokens[i, : lens[i]] = r.prompt  # right-pad; real len in lengths
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lens, jnp.int32)}
         cache, logits = self._prefill_fn(L)(self.params, batch)
+        # Highest decode write is at position len + max_new - 2 (the first
+        # sampled token comes from the prefill logits and writes nothing;
+        # max_new <= 0 still emits it, hence the clamp).
+        needed = max(n + max(r.max_new_tokens, 1) - 1
+                     for n, r in zip(lens, reqs))
+        cache = self._grown(cache, needed)
 
         temps = np.asarray([r.temperature for r in reqs], np.float32)
         top_ks = np.asarray([r.top_k for r in reqs], np.int32)

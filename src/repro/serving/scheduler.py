@@ -1,27 +1,43 @@
 """Continuous-batching scheduler: request queue, slot table, mid-decode
-admission, per-slot decode state, on-device sampling.
+admission, per-slot decode state, paged KV allocation, on-device sampling.
 
 The serving analogue of the paper's headline property (the M4BRAM computes
 while remaining fully usable as memory): the decode batch keeps computing
 while individual slots are drained and refilled — no global barrier
-between "batches" ever exists.
+between "batches" ever exists — and, with the paged cache, KV memory is
+committed per *actual* request footprint instead of a worst-case `max_ctx`
+reservation per slot.
 
 Design:
   * ``max_batch`` decode slots. The jitted decode step always runs the
     full ``(max_batch, 1)`` token batch — ONE compiled decode signature
     for the scheduler's whole lifetime; slot occupancy changes, shapes
     never do. Free slots decode a dummy token whose output is discarded.
-  * Admission: a waiting request is prefilled solo (B=1, prompt bucketed),
-    and its KV / recurrent / RWKV state is scattered into the freed batch
-    row (``kv_cache.scatter_into_slot``). Only that row changes, so
-    requests join mid-decode without perturbing live slots — a request's
-    greedy output is bit-identical whether it is served solo, in a static
-    batch, or admitted while other slots are deep into their decodes.
+  * Admission: a waiting request is prefilled solo (B=1, prompt
+    right-padded to a bucket, real length passed as ``lengths`` so pad
+    slots never enter the cache or shift rope positions), and its KV /
+    recurrent / RWKV state is scattered into the freed batch row
+    (``kv_cache.scatter_into_slot`` / ``scatter_into_paged``). Only that
+    row changes, so requests join mid-decode without perturbing live
+    slots — a request's greedy output is bit-identical whether it is
+    served solo, in a static batch, or admitted while other slots are
+    deep into their decodes, and whether the cache is contiguous or paged.
+  * Paged KV cache (full-attention archs, default): a shared block pool
+    ``(L, num_blocks, block_size, NKV, H)`` plus per-slot block tables.
+    Admission reserves the request's actual worst-case block count
+    (``ceil((len + max_new - 1) / block_size)``) — when the pool can't
+    cover it the request *queues* (no crash, no partial admission, no
+    mid-decode deadlock). Blocks are allocated lazily: prompt blocks at
+    admission, one more each time a decode step crosses a block boundary.
+    Retirement frees a slot's blocks (and its unclaimed reservation)
+    immediately.
+  * Failure isolation: a request that can never fit (bucketed prompt or
+    prompt + max_new beyond capacity) is marked failed (``Request.error``)
+    and returned — it does not raise out of ``run()`` and live slots keep
+    decoding.
   * Per-slot decode state: ``DecodeCache.pos``/``KVCache.slot_pos``/
     ``length`` all carry a batch axis; each slot's position advances
     independently of its neighbours.
-  * Retirement: per-request ``max_new_tokens`` or EOS frees the slot; the
-    next waiting request is admitted on the same scheduler step.
   * Sampling: vectorized on-device greedy / temperature / top-k with
     per-slot parameters and per-request ``(seed, rid)``-derived PRNG
     streams (``repro.serving.sampling``).
@@ -47,8 +63,19 @@ from repro.core.precision import PrecisionPolicy, as_policy
 from repro.core.quant import QuantConfig
 from repro.core.quantized_linear import quantize_params_for_serving
 from repro.models import build_model
-from repro.models.kv_cache import scatter_into_slot
+from repro.models.kv_cache import (
+    KVCache,
+    PagedKVCache,
+    scatter_into_paged,
+    scatter_into_slot,
+)
 from repro.serving import sampling
+
+
+def _contig_headroom() -> int:
+    from repro.models.transformer import DECODE_HEADROOM
+
+    return DECODE_HEADROOM
 
 
 @dataclasses.dataclass
@@ -58,7 +85,10 @@ class Request:
     ``arrival_time`` is seconds relative to the start of ``run()`` (0 =
     already queued). ``on_token`` streams tokens as they are sampled.
     ``t_first`` / ``t_done`` are filled by the scheduler (seconds since the
-    run started) for latency accounting."""
+    run started) for latency accounting. ``error`` is set (and the request
+    returned with no tokens) when it can never fit the cache — oversized
+    requests are rejected individually instead of aborting the serve
+    loop."""
 
     rid: int
     prompt: np.ndarray            # (T,) int32
@@ -71,6 +101,11 @@ class Request:
     out_tokens: Optional[List[int]] = None
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    error: Optional[str] = None
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
 
 
 class ContinuousScheduler:
@@ -85,6 +120,9 @@ class ContinuousScheduler:
         bucket: int = 64,
         seed: int = 0,
         on_token: Optional[Callable[[Request, int], None]] = None,
+        paged: Optional[bool] = None,
+        block_size: int = 16,
+        pool_blocks: Optional[int] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -101,19 +139,64 @@ class ContinuousScheduler:
 
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._scatter = jax.jit(scatter_into_slot, donate_argnums=(0,))
+        self._scatter_paged = jax.jit(scatter_into_paged, donate_argnums=(0,))
         self._prefill_cache = {}
 
-        # Fixed-shape decode state: allocated once, reused for the whole
-        # scheduler lifetime (the one compiled decode signature).
-        self.cache = self.model.init_cache(max_batch, max_ctx)
-        kv = self.cache.kv
-        # Full-attention caches bound the absolute positions a slot can
-        # reach; ring buffers and recurrent states are position-unbounded.
-        self._capacity = (
-            kv.k.shape[2] if kv is not None and kv.window == 0 else None
-        )
+        # Cache flavour. Paged needs a full-attention KV cache (ring
+        # buffers are already window-bounded; the int8 cache keeps
+        # per-slot scale planes) — eligible archs default to paged.
+        init_paged = getattr(self.model, "init_paged_cache", None)
+        can_page = (init_paged is not None and not cfg.attn_window
+                    and not cfg.kv_cache_quant)
+        if paged is None:
+            paged = can_page
+        elif paged and not can_page:
+            raise ValueError(
+                f"{cfg.name}: paged KV cache requires a full-attention, "
+                "non-quantized cache (ring buffers and recurrent states "
+                "are already footprint-bounded)"
+            )
+        self.paged = paged
+        self.block_size = block_size
 
         B = max_batch
+        if paged:
+            # Per-row virtual capacity = max_ctx rounded up to blocks; the
+            # pool defaults to the contiguous worst case (every slot full)
+            # — pass a smaller pool_blocks to overcommit.
+            self._max_blocks = -(-max_ctx // block_size)
+            usable = (pool_blocks if pool_blocks is not None
+                      else max_batch * self._max_blocks)
+            if usable < 1:
+                raise ValueError("pool_blocks must be >= 1")
+            self.pool_blocks = usable
+            self.cache = init_paged(B, usable + 1, block_size,
+                                    self._max_blocks)  # +1: trash block 0
+            # Admission bound: max_ctx in every mode (the block-rounded
+            # physical row is >= this), so static / contiguous / paged
+            # agree on which requests fit.
+            self._capacity = max_ctx
+            self._free: List[int] = list(range(usable, 0, -1))
+            self._avail = usable          # free minus outstanding reservations
+            self._reserved = np.zeros((B,), np.int64)
+            self._block_tab = np.full((B, self._max_blocks), -1, np.int32)
+            self._table_dirty = False
+            self._peak_blocks = 0
+        else:
+            # Fixed-shape contiguous state: every slot reserves a full
+            # max_ctx(+headroom) row for its whole lifetime.
+            self.cache = self.model.init_cache(max_batch, max_ctx)
+            kv = self.cache.kv
+            # Full-attention caches bound the absolute positions a slot
+            # can reach (admission bound = max_ctx in every mode; the
+            # physical row carries headroom beyond it); ring buffers and
+            # recurrent states are position-unbounded.
+            self._capacity = (
+                max_ctx if isinstance(kv, KVCache) and kv.window == 0
+                else None
+            )
+
+        self._pos_host = np.zeros((B,), np.int64)    # next write position
         self._cur = np.zeros((B, 1), np.int32)       # next input token/slot
         self._temps = np.zeros((B,), np.float32)
         self._top_ks = np.zeros((B,), np.int32)
@@ -150,23 +233,162 @@ class ContinuousScheduler:
     def _now(self) -> Optional[float]:
         return None if self._t0 is None else time.perf_counter() - self._t0
 
+    # -- paged-pool accounting ---------------------------------------------
+
+    def _need_tokens(self, req: Request) -> int:
+        # The first sampled token comes from the prefill logits and writes
+        # no cache slot; only the remaining max_new - 1 decode inputs do.
+        # max_new <= 0 still emits that prefill token, so it reserves like
+        # max_new = 1 (anything less would under-reserve the prompt).
+        return len(req.prompt) + max(req.max_new_tokens, 1) - 1
+
+    def _need_blocks(self, req: Request) -> int:
+        return -(-self._need_tokens(req) // self.block_size)
+
+    def _reject_reason(self, req: Request) -> Optional[str]:
+        """Non-None iff the request can never be served by this scheduler
+        (vs. transiently waiting for pool blocks)."""
+        if self._capacity is None:
+            return None
+        need = self._need_tokens(req)
+        if self.paged:
+            if need > self._capacity or self._need_blocks(req) > self.pool_blocks:
+                return (f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                        f"max_new_tokens ({req.max_new_tokens}) needs {need} "
+                        f"cache slots, beyond capacity ({self._capacity} "
+                        f"per slot, {self.pool_blocks * self.block_size} "
+                        "pooled); raise max_ctx / pool_blocks")
+            return None
+        L = self._bucketed(len(req.prompt))
+        # The solo prefill array carries L + headroom slots and must fit
+        # the max_ctx + headroom row, hence the L > max_ctx bound.
+        if L > self.max_ctx or need > self._capacity:
+            return (f"request {req.rid}: bucketed prompt ({L}) or prompt + "
+                    f"max_new_tokens ({need} slots) exceeds cache capacity "
+                    f"(max_ctx {self.max_ctx}, {self._capacity} slots); "
+                    "raise max_ctx")
+        return None
+
+    def _alloc_block(self, slot: int, j: int) -> None:
+        if not self._free:
+            raise RuntimeError(
+                "paged pool invariant violated: reservation accounting "
+                "should guarantee a free block"
+            )
+        self._block_tab[slot, j] = self._free.pop()
+        self._reserved[slot] -= 1
+        self._table_dirty = True
+        self._peak_blocks = max(self._peak_blocks,
+                                self.pool_blocks - len(self._free))
+
+    def _alloc_boundary_blocks(self) -> None:
+        """Allocate the block backing the position each live slot writes
+        this step (a no-op except on block-boundary crossings)."""
+        for b, req in enumerate(self._slots):
+            if req is None:
+                continue
+            j = int(self._pos_host[b]) // self.block_size
+            if j < self._max_blocks and self._block_tab[b, j] < 0:
+                self._alloc_block(b, j)
+
+    def _sync_table(self) -> None:
+        if self._table_dirty:
+            self.cache = dataclasses.replace(
+                self.cache,
+                kv=dataclasses.replace(
+                    self.cache.kv, block_table=jnp.asarray(self._block_tab)
+                ),
+            )
+            self._table_dirty = False
+
+    def _release_slot(self, b: int) -> None:
+        self._slots[b] = None
+        if not self.paged:
+            return
+        row = self._block_tab[b]
+        used = row[row >= 0]
+        self._free.extend(int(x) for x in used)
+        row[:] = -1
+        self._avail += len(used) + int(self._reserved[b])
+        self._reserved[b] = 0
+        self._table_dirty = True
+
+    def pool_stats(self) -> dict:
+        """KV-memory utilization: resident bytes actually backing live
+        tokens vs. the contiguous worst-case reservation."""
+        kv = self.cache.kv
+        if kv is None:
+            return {"paged": False, "resident_kv_bytes": 0,
+                    "reserved_kv_bytes": 0}
+        if not self.paged:
+            # Count every cache plane (incl. int8 scale planes) — the
+            # whole reservation is resident for the scheduler's lifetime.
+            total = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                        for a in (kv.k, kv.v, kv.k_scale, kv.v_scale)
+                        if a is not None)
+            return {"paged": False,
+                    "resident_kv_bytes": total,
+                    "reserved_kv_bytes": total}
+        per_token = (kv.k.shape[0] * int(np.prod(kv.k.shape[3:]))
+                     * 2 * kv.k.dtype.itemsize)
+        allocated = self.pool_blocks - len(self._free)
+        return {
+            "paged": True,
+            "block_size": self.block_size,
+            "pool_blocks": self.pool_blocks,
+            "free_blocks": len(self._free),
+            "allocated_blocks": allocated,
+            "peak_allocated_blocks": self._peak_blocks,
+            "capacity_tokens": self.pool_blocks * self.block_size,
+            "resident_kv_bytes": allocated * self.block_size * per_token,
+            "peak_resident_kv_bytes":
+                self._peak_blocks * self.block_size * per_token,
+            # What the contiguous scheduler would allocate for the same
+            # settings: max_ctx + decode headroom per slot (matches the
+            # non-paged branch, which measures the actual arrays).
+            "reserved_kv_bytes":
+                self.max_batch * (self.max_ctx + _contig_headroom())
+                * per_token,
+        }
+
+    def reset_pool_peak(self) -> None:
+        if self.paged:
+            self._peak_blocks = self.pool_blocks - len(self._free)
+
     # -- admission / retirement --------------------------------------------
+
+    def _fail(self, req: Request, reason: str) -> None:
+        req.error = reason
+        if req.out_tokens is None:
+            req.out_tokens = []
+        req.t_done = self._now()
 
     def _admit(self, req: Request, slot: int) -> Optional[Request]:
         """Prefill `req` solo and scatter its state into batch row `slot`.
         Returns the request if it finished on its very first token."""
-        L = self._bucketed(len(req.prompt))
-        if self._capacity is not None and L + req.max_new_tokens > self._capacity:
-            raise ValueError(
-                f"request {req.rid}: bucketed prompt ({L}) + max_new_tokens "
-                f"({req.max_new_tokens}) exceeds cache capacity "
-                f"({self._capacity}); raise max_ctx"
-            )
+        n = len(req.prompt)
+        L = self._bucketed(n)
         tokens = np.zeros((1, L), np.int32)
-        tokens[0, L - len(req.prompt):] = req.prompt  # left-pad
-        solo, logits = self._prefill_fn(L)(self.params,
-                                           {"tokens": jnp.asarray(tokens)})
-        self.cache = self._scatter(self.cache, solo, slot)
+        tokens[0, :n] = req.prompt  # right-pad; real length via `lengths`
+        solo, logits = self._prefill_fn(L)(
+            self.params,
+            {"tokens": jnp.asarray(tokens),
+             "lengths": jnp.asarray([n], jnp.int32)},
+        )
+        if self.paged:
+            need = self._need_blocks(req)
+            self._avail -= need
+            self._reserved[slot] = need
+            for j in range(-(-n // self.block_size)):
+                self._alloc_block(slot, j)
+            # scatter_into_paged also writes this row's table device-side;
+            # _table_dirty stays set so rows freed earlier still sync.
+            self.cache = self._scatter_paged(
+                self.cache, solo, slot, jnp.asarray(self._block_tab[slot])
+            )
+        else:
+            self.cache = self._scatter(self.cache, solo, slot)
+        self._pos_host[slot] = n
 
         key = sampling.request_key(self.seed, req.rid)
         tok = int(np.asarray(sampling.sample_tokens(
@@ -187,7 +409,7 @@ class ContinuousScheduler:
             req.t_first = self._now()
         self._emit(req, tok)
         if self._finished(req, tok):
-            self._slots[slot] = None
+            self._release_slot(slot)
             return req
         return None
 
@@ -208,16 +430,40 @@ class ContinuousScheduler:
     def step(self) -> List[Request]:
         """One scheduler step: admit waiting requests into free slots, run
         one batched decode step, sample, retire finished slots. Returns
-        the requests that finished this step."""
+        the requests that finished this step (including any rejected as
+        oversized — those carry ``error`` and no tokens)."""
         finished: List[Request] = []
+        blocked = False
         for b in range(self.max_batch):
-            if self._slots[b] is None and self.waiting:
-                done = self._admit(self.waiting.popleft(), b)
+            if self._slots[b] is not None or blocked:
+                continue
+            while self.waiting:
+                head = self.waiting[0]
+                reason = self._reject_reason(head)
+                if reason is not None:
+                    # Oversized: reject just this request and keep serving.
+                    self.waiting.popleft()
+                    self._fail(head, reason)
+                    finished.append(head)
+                    continue
+                if self.paged and self._need_blocks(head) > self._avail:
+                    blocked = True  # pool full: queue (FIFO), don't crash
+                    break
+                self.waiting.popleft()
+                done = self._admit(head, b)
                 if done is not None:
+                    # Finished on its prefill token (max_new <= 1 /
+                    # instant EOS) — the slot is free again, keep
+                    # admitting into it this same step.
                     finished.append(done)
+                    continue
+                break
         if self.num_active == 0:
             return finished
 
+        if self.paged:
+            self._alloc_boundary_blocks()
+            self._sync_table()
         self.cache, logits = self._decode(self.params, self.cache,
                                           jnp.asarray(self._cur))
         toks = np.asarray(sampling.sample_tokens(
@@ -229,11 +475,12 @@ class ContinuousScheduler:
         for b, req in enumerate(self._slots):
             if req is None:
                 continue
+            self._pos_host[b] += 1
             tok = int(toks[b])
             req.out_tokens.append(tok)
             self._emit(req, tok)
             if self._finished(req, tok):
-                self._slots[b] = None
+                self._release_slot(b)
                 finished.append(req)
             else:
                 self._cur[b, 0] = tok
@@ -242,7 +489,9 @@ class ContinuousScheduler:
     def run(self, requests=()) -> List[Request]:
         """Serve a workload to completion, admitting each request no
         earlier than its ``arrival_time`` (seconds from now). Returns the
-        requests in completion order with ``t_first``/``t_done`` filled."""
+        requests in completion order with ``t_first``/``t_done`` filled;
+        oversized requests come back failed (``error`` set) without
+        aborting the loop."""
         pending = sorted(requests, key=lambda r: r.arrival_time)
         self._t0 = time.perf_counter()
         done: List[Request] = []
