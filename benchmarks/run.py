@@ -10,6 +10,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    decode_bench,
     fig9_activation_sweep,
     fig10_vs_bramac,
     fig11_parallelism_ablation,
@@ -29,6 +30,7 @@ MODULES = {
     "table3": table3_intralayer,
     "quant_error": quant_error,
     "kernels": kernel_bench,
+    "decode": decode_bench,
     "roofline": roofline_table,
     "serving": serving_bench,
 }

@@ -25,6 +25,7 @@ from repro.core import bitplane
 from repro.kernels import bitplane_matmul as _bpm
 from repro.kernels import fused_matmul as _fused
 from repro.kernels import pack_quant as _pq
+from repro.kernels import paged_attention as _paged
 from repro.kernels import ref as _ref
 from repro.kernels import wkv6 as _wkv6
 from repro.kernels.registry import KernelBackend, get_registry, use_backend  # noqa: F401
@@ -219,6 +220,48 @@ def flash_attention(
             bq=bq, bk=bk, interpret=be.interpret,
         )
     return out.reshape(B, NQ, T, H).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def paged_attention(
+    q: jax.Array,            # (B, 1, NQ, H) — one new token per row
+    pool_k: jax.Array,       # (num_blocks, block_size, NKV, H)
+    pool_v: jax.Array,
+    block_table: jax.Array,  # (B, max_blocks) int32, -1 = unallocated
+    q_pos: jax.Array,        # (B,) per-row decode position
+    *,
+    k_scale: Optional[jax.Array] = None,  # (num_blocks, block_size, NKV, 1)
+    v_scale: Optional[jax.Array] = None,
+    softcap: float = 0.0,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    backend=None,
+) -> jax.Array:
+    """Fused flash-decode attention over the paged KV pool.
+
+    Block-table resolution happens *inside* the kernel (scalar prefetch):
+    each grid step streams one live pool block into VMEM and folds it
+    into the online softmax — no contiguous gather of the pool is ever
+    materialized, per-row HBM traffic is the row's live blocks, and an
+    int8 pool (``k_scale``/``v_scale`` planes) dequantizes in-kernel.
+    The reference backend runs the gather-then-attend oracle
+    (:func:`repro.kernels.ref.paged_attention_ref`), which is the
+    bit-exactness specification the kernel is tested against.
+    """
+    be = get_registry().resolve(backend)
+    if be.is_reference:
+        return _ref.paged_attention_ref(
+            q, pool_k, pool_v, block_table, q_pos,
+            k_scale=k_scale, v_scale=v_scale, softcap=softcap,
+        )
+    bs, n_kv = pool_k.shape[1], pool_k.shape[2]
+    bh, _, _ = blocks or get_registry().paged_attention_plan(
+        n_kv, bs, pool_k.shape[3], be
+    )
+    if bh <= 0 or n_kv % bh:
+        bh = n_kv  # plans must divide the KV heads; fall back to all
+    return _paged.paged_attention(
+        q, pool_k, pool_v, block_table, q_pos, k_scale, v_scale,
+        softcap=softcap, bh=bh, interpret=be.interpret,
+    )
 
 
 def wkv6(r, k, v, w, u, *, chunk: int = 32, backend=None) -> jax.Array:

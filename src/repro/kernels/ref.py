@@ -101,6 +101,54 @@ def wkv6_ref(
     return outs
 
 
+def paged_attention_ref(
+    q: jax.Array,            # (B, 1, NQ, H)
+    pool_k: jax.Array,       # (num_blocks, block_size, NKV, H)
+    pool_v: jax.Array,
+    block_table: jax.Array,  # (B, max_blocks) int32, -1 = unallocated
+    q_pos: jax.Array,        # (B,) per-row decode position
+    k_scale: jax.Array | None = None,  # (num_blocks, block_size, NKV, 1)
+    v_scale: jax.Array | None = None,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Gather-then-attend oracle for the fused paged-attention kernel.
+
+    Materializes each row's blocks in table order (the contiguous
+    slot == position layout) and runs the same one-token masked-softmax
+    math as ``models.common.decode_attention`` — including the int8-pool
+    per-slot rescaling. This IS the "separate buffer" the fused kernel
+    eliminates; it survives as the semantic specification."""
+    B, _, NQ, H = q.shape
+    bs, NKV = pool_k.shape[1], pool_k.shape[2]
+    G = NQ // NKV
+    max_blocks = block_table.shape[1]
+    tbl = jnp.maximum(block_table, 0)
+    k_rows = pool_k[tbl].reshape(B, max_blocks * bs, NKV, H)
+    v_rows = pool_v[tbl].reshape(B, max_blocks * bs, NKV, H)
+    virt = jnp.arange(max_blocks * bs, dtype=jnp.int32)
+    alloc = jnp.repeat(block_table >= 0, bs, axis=1)
+    kpos = jnp.where(alloc, virt[None, :], -1)
+
+    qr = q.reshape(B, NKV, G, H)
+    s = jnp.einsum("bngh,bsnh->bngs", qr.astype(jnp.float32),
+                   k_rows.astype(jnp.float32))
+    if k_scale is not None:
+        ks = k_scale[tbl].reshape(B, max_blocks * bs, NKV)
+        s = s * jnp.moveaxis(ks, -1, 1)[:, :, None, :]
+    s = s * (H**-0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (B,))
+    valid = (kpos >= 0) & (kpos <= q_pos[:, None])
+    s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        vs = v_scale[tbl].reshape(B, max_blocks * bs, NKV)
+        p = p * jnp.moveaxis(vs, -1, 1)[:, :, None, :]
+    out = jnp.einsum("bngs,bsnh->bngh", p, v_rows.astype(jnp.float32))
+    return out.reshape(B, 1, NQ, H).astype(q.dtype)
+
+
 def flash_attention_ref(
     q: jax.Array,  # (BH, Tq, D)
     k: jax.Array,  # (BH, Tk, D)

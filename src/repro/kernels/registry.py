@@ -31,7 +31,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import json
 import time
+from pathlib import Path
 from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple, Union
 
 from repro.kernels.common import round_up
@@ -128,9 +130,50 @@ def pick_fused_blocks(
     return bm, bn, bk
 
 
+PAGED_ATTN_VMEM_BUDGET = 2 << 20
+
+
+def pick_paged_attention_blocks(
+    m: int,   # NKV — number of KV heads
+    n: int,   # block_size — pool tokens per block
+    k: int,   # H — head dim
+    *,
+    m_align: int = 8,
+    n_align: int = 128,
+    k_align: int = 128,
+    vmem_budget: int = PAGED_ATTN_VMEM_BUDGET,
+) -> Blocks:
+    """Plan (bh, block_size, H) for the paged-attention decode kernel.
+
+    The only free knob is ``bh`` — how many KV heads one grid step
+    streams alongside a pool block: larger bh = fewer grid steps and
+    DMAs, more VMEM per step (k + v tiles double-buffered in fp32 after
+    dequant). bh must divide NKV; block_size and H are fixed by the pool
+    layout and pass through so the plan cache keys on the full shape.
+    """
+    bh = m
+    # k/v tiles double-buffered + fp32 working copies + softmax scratch.
+    while bh > 1 and 8 * n * bh * k > vmem_budget:
+        bh = max(d for d in range(1, bh) if m % d == 0)
+    return bh, n, k
+
+
+def _paged_attention_candidates(heur: Blocks, m, n, k, be) -> list:
+    """Autotune candidates: every divisor of NKV as the bh knob."""
+    _, bs, hd = heur
+    return [(d, bs, hd) for d in range(1, m + 1) if m % d == 0]
+
+
 _PLANNERS: Dict[str, Callable[..., Blocks]] = {
     "bitplane_matmul": pick_matmul_blocks,
     "fused_matmul": pick_fused_blocks,
+    "paged_attention": pick_paged_attention_blocks,
+}
+
+# Per-op autotune candidate generators; ops without an entry fall back to
+# the generic matmul-style (bm, bk) factor sweep.
+_CANDIDATES: Dict[str, Callable[..., list]] = {
+    "paged_attention": _paged_attention_candidates,
 }
 
 
@@ -229,6 +272,11 @@ class KernelRegistry:
     def fused_matmul_plan(self, m, n, k, backend=None) -> Blocks:
         return self.plan("fused_matmul", m, n, k, backend)
 
+    def paged_attention_plan(self, n_kv, block_size, head_dim,
+                             backend=None) -> Blocks:
+        return self.plan("paged_attention", n_kv, block_size, head_dim,
+                         backend)
+
     def record_plan(
         self, op: str, m: int, n: int, k: int, blocks: Blocks, backend=None
     ) -> None:
@@ -262,7 +310,12 @@ class KernelRegistry:
         heur = _PLANNERS[op](
             m, n, k, m_align=be.m_align, n_align=be.n_align, k_align=be.k_align
         )
-        cands = list(candidates) if candidates else self._default_candidates(heur, m, n, k, be)
+        if candidates:
+            cands = list(candidates)
+        elif op in _CANDIDATES:
+            cands = _CANDIDATES[op](heur, m, n, k, be)
+        else:
+            cands = self._default_candidates(heur, m, n, k, be)
         if heur not in cands:
             cands.insert(0, heur)
         best: Optional[Tuple[float, Blocks]] = None
@@ -312,6 +365,35 @@ class KernelRegistry:
     def clear_plans(self) -> None:
         self._plans.clear()
         self._plan_hits = self._plan_misses = 0
+
+    # -- plan persistence --------------------------------------------------
+
+    def save_plans(self, path) -> int:
+        """Write the block-plan cache to `path` as JSON (keyed by
+        op/shape/backend), so autotune winners survive process restarts.
+        Returns the number of plans written."""
+        entries = [
+            {"op": op, "backend": be, "shape": list(shape),
+             "blocks": list(blocks)}
+            for (op, be, shape), blocks in sorted(self._plans.items())
+        ]
+        Path(path).write_text(
+            json.dumps({"version": 1, "plans": entries}, indent=2) + "\n"
+        )
+        return len(entries)
+
+    def load_plans(self, path) -> int:
+        """Merge plans from a `save_plans` JSON file into the cache
+        (loaded plans overwrite heuristic entries, like `record_plan`).
+        Returns the number of plans loaded."""
+        obj = json.loads(Path(path).read_text())
+        if obj.get("version") != 1:
+            raise ValueError(f"unsupported plan-cache version in {path!s}: "
+                             f"{obj.get('version')!r}")
+        for e in obj["plans"]:
+            key = (e["op"], e["backend"], tuple(int(x) for x in e["shape"]))
+            self._plans[key] = tuple(int(x) for x in e["blocks"])
+        return len(obj["plans"])
 
 
 _REGISTRY = KernelRegistry()

@@ -22,7 +22,13 @@ Full-attention archs serve from the paged block-pool KV cache by default:
 pool (defaults to the contiguous worst case; set it lower to overcommit —
 admission then queues on actual free blocks), --no-paged forces the
 contiguous per-slot max_ctx reservation. Pool utilization is reported
-after a continuous run.
+after a continuous run. --kv-int8 composes with the paged pool: blocks
+hold int8 codes plus fp32 scale planes and the fused paged-attention
+decode kernel dequantizes in-kernel (~2× tokens per pooled byte).
+
+--plans FILE persists the kernel registry's block-plan cache (autotune
+winners, e.g. the paged-attention bh knob) across process restarts:
+loaded before serving if the file exists, written back on exit.
 """
 import argparse
 
@@ -58,16 +64,25 @@ def main():
                          "contiguous worst case max_batch * max_ctx)")
     ap.add_argument("--no-paged", action="store_true",
                     help="force the contiguous per-slot KV reservation")
+    ap.add_argument("--plans", default=None,
+                    help="block-plan cache JSON: loaded at startup if it "
+                         "exists, saved back (with any new plans) on exit")
     args = ap.parse_args()
 
     if args.quant and args.policy:
         raise SystemExit("--quant and --policy are mutually exclusive")
     if args.continuous and args.static:
         raise SystemExit("--continuous and --static are mutually exclusive")
-    if args.backend:
-        from repro.kernels import get_registry
+    from repro.kernels import get_registry
 
+    if args.backend:
         get_registry().set_active(args.backend)
+    if args.plans:
+        import os
+
+        if os.path.exists(args.plans):
+            n = get_registry().load_plans(args.plans)
+            print(f"loaded {n} block plans from {args.plans}")
 
     import dataclasses
 
@@ -167,6 +182,9 @@ def main():
           f"kv_int8={args.kv_int8}")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:10]}")
+    if args.plans:
+        n = get_registry().save_plans(args.plans)
+        print(f"saved {n} block plans to {args.plans}")
 
 
 if __name__ == "__main__":

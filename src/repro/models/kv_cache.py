@@ -186,16 +186,25 @@ class PagedKVCache:
     (block_table[b, p // block_size], p % block_size); gathering a row's
     blocks in table order therefore reproduces the contiguous layout slot
     == position, which is what makes the paged path bit-identical to the
-    contiguous one."""
+    contiguous one.
+
+    Optional int8 pool (the contiguous cache's kv_cache_quant applied to
+    the block pool): k/v hold int8 codes and k_scale/v_scale hold
+    per-(slot, head) fp32 scale planes (L, num_blocks, block_size, NKV, 1)
+    written by the quantizing `paged_cache_write` — roughly 2× the tokens
+    per pooled byte."""
 
     k: jax.Array
     v: jax.Array
     block_table: jax.Array
     length: jax.Array
+    k_scale: Optional[jax.Array] = None  # (L, num_blocks, bs, NKV, 1) fp32
+    v_scale: Optional[jax.Array] = None
     block_size: int = 16
 
     def tree_flatten(self):
-        return (self.k, self.v, self.block_table, self.length), (self.block_size,)
+        return (self.k, self.v, self.block_table, self.length,
+                self.k_scale, self.v_scale), (self.block_size,)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -203,7 +212,7 @@ class PagedKVCache:
 
     @property
     def quantized(self) -> bool:
-        return False
+        return self.k_scale is not None
 
     @property
     def num_blocks(self) -> int:
@@ -216,12 +225,19 @@ class PagedKVCache:
     @staticmethod
     def init(layers: int, batch: int, num_blocks: int, block_size: int,
              max_blocks: int, n_kv: int, head_dim: int,
-             dtype=jnp.bfloat16) -> "PagedKVCache":
+             dtype=jnp.bfloat16, quantized: bool = False) -> "PagedKVCache":
+        kd = jnp.int8 if quantized else dtype
+        scale = (
+            jnp.zeros((layers, num_blocks, block_size, n_kv, 1), jnp.float32)
+            if quantized else None
+        )
         return PagedKVCache(
-            k=jnp.zeros((layers, num_blocks, block_size, n_kv, head_dim), dtype),
-            v=jnp.zeros((layers, num_blocks, block_size, n_kv, head_dim), dtype),
+            k=jnp.zeros((layers, num_blocks, block_size, n_kv, head_dim), kd),
+            v=jnp.zeros((layers, num_blocks, block_size, n_kv, head_dim), kd),
             block_table=jnp.full((batch, max_blocks), -1, jnp.int32),
             length=jnp.zeros((batch,), jnp.int32),
+            k_scale=scale,
+            v_scale=jnp.copy(scale) if quantized else None,
             block_size=block_size,
         )
 
@@ -237,31 +253,59 @@ def paged_slot(block_table, pos, block_size: int):
 
 
 def paged_cache_write(pool_k, pool_v, block_table, k_new, v_new, pos,
-                      block_size: int):
+                      block_size: int, k_scale=None, v_scale=None):
     """Write one token's k/v (B, 1, NKV, H) into a single layer's pool
     (num_blocks, block_size, NKV, H) at per-row positions `pos` (B,).
-    Live rows own disjoint blocks; free rows all write the trash block."""
+    Live rows own disjoint blocks; free rows all write the trash block.
+
+    When the pool is int8 (scale planes passed), the incoming bf16 k/v is
+    quantized here — per-(token, head) symmetric codes land in the pool
+    and their fp32 scales in the matching scale-plane slots. Returns
+    (pool_k, pool_v, k_scale, v_scale); the scales are None passthroughs
+    for an unquantized pool."""
     blk, off = paged_slot(block_table, pos, block_size)
+    if k_scale is not None:
+        k_new, ks = quantize_kv(k_new)
+        v_new, vs = quantize_kv(v_new)
+        k_scale = k_scale.at[blk, off].set(ks[:, 0])
+        v_scale = v_scale.at[blk, off].set(vs[:, 0])
     pool_k = pool_k.at[blk, off].set(k_new[:, 0].astype(pool_k.dtype))
     pool_v = pool_v.at[blk, off].set(v_new[:, 0].astype(pool_v.dtype))
-    return pool_k, pool_v
+    return pool_k, pool_v, k_scale, v_scale
 
 
-def paged_gather(pool_k, pool_v, block_table):
+def paged_gather(pool_k, pool_v, block_table, k_scale=None, v_scale=None,
+                 max_blocks: Optional[int] = None):
     """Gather each row's blocks in table order from a single layer's pool:
-    returns (k (B, S, NKV, H), v, kpos (B, S)) with S = max_blocks ·
-    block_size and kpos[b, p] = p where row b's virtual block p // bs is
-    allocated, -1 elsewhere — the exact (values, positions) layout of the
-    contiguous cache, ready for decode_attention."""
-    B, max_blocks = block_table.shape
+    returns (k (B, S, NKV, H), v, kpos (B, S), k_scale, v_scale) with
+    S = max_blocks · block_size and kpos[b, p] = p where row b's virtual
+    block p // bs is allocated, -1 elsewhere — the exact
+    (values, positions) layout of the contiguous cache, ready for
+    decode_attention. Scale planes of an int8 pool gather the same way
+    ((B, S, NKV, 1) — decode_attention's quantized-cache layout) and come
+    back None for a bf16 pool.
+
+    `max_blocks` (host-known, static) clamps the gather to the first
+    `max_blocks` table columns: when the caller knows no live row has
+    more than that many allocated blocks (the scheduler's allocator
+    does), the dead-weight gather of guaranteed-unallocated trash-block
+    columns is skipped entirely instead of copying blocks_per_row blocks
+    per row every step."""
+    if max_blocks is not None:
+        block_table = block_table[:, :max_blocks]
+    B, n_blocks = block_table.shape
     bs = pool_k.shape[1]
     tbl = jnp.maximum(block_table, 0)
-    k_rows = pool_k[tbl].reshape(B, max_blocks * bs, *pool_k.shape[2:])
-    v_rows = pool_v[tbl].reshape(B, max_blocks * bs, *pool_v.shape[2:])
-    virt = jnp.arange(max_blocks * bs, dtype=jnp.int32)
+    k_rows = pool_k[tbl].reshape(B, n_blocks * bs, *pool_k.shape[2:])
+    v_rows = pool_v[tbl].reshape(B, n_blocks * bs, *pool_v.shape[2:])
+    virt = jnp.arange(n_blocks * bs, dtype=jnp.int32)
     alloc = jnp.repeat(block_table >= 0, bs, axis=1)
     kpos = jnp.where(alloc, virt[None, :], -1)
-    return k_rows, v_rows, kpos
+    ks_rows = vs_rows = None
+    if k_scale is not None:
+        ks_rows = k_scale[tbl].reshape(B, n_blocks * bs, *k_scale.shape[2:])
+        vs_rows = v_scale[tbl].reshape(B, n_blocks * bs, *v_scale.shape[2:])
+    return k_rows, v_rows, kpos, ks_rows, vs_rows
 
 
 @jax.tree_util.register_pytree_node_class
@@ -424,6 +468,15 @@ def scatter_into_paged(batch: DecodeCache, solo: DecodeCache, slot,
     )
     k = kv.k.at[:, dst].set(as_blocks(solo.kv.k).astype(kv.k.dtype))
     v = kv.v.at[:, dst].set(as_blocks(solo.kv.v).astype(kv.v.dtype))
+    ks = vs = None
+    if kv.quantized:
+        # The solo prefill cache is quantized too (same cfg): its codes
+        # scattered above, its per-(slot, head) scales go to the matching
+        # scale-plane blocks.
+        ks = kv.k_scale.at[:, dst].set(
+            as_blocks(solo.kv.k_scale).astype(kv.k_scale.dtype))
+        vs = kv.v_scale.at[:, dst].set(
+            as_blocks(solo.kv.v_scale).astype(kv.v_scale.dtype))
     table = jax.lax.dynamic_update_slice(
         kv.block_table, row_blocks[None, : kv.blocks_per_row], (slot, 0)
     )
@@ -434,7 +487,8 @@ def scatter_into_paged(batch: DecodeCache, solo: DecodeCache, slot,
         batch.pos, solo.pos.astype(batch.pos.dtype), (slot,)
     )
     return DecodeCache(pos=pos, kv=PagedKVCache(
-        k=k, v=v, block_table=table, length=length, block_size=bs))
+        k=k, v=v, block_table=table, length=length,
+        k_scale=ks, v_scale=vs, block_size=bs))
 
 
 def grow_cache(cache: DecodeCache, size: int) -> DecodeCache:

@@ -205,21 +205,45 @@ def block_decode_paged(
     pool_k, pool_v,          # (num_blocks, block_size, NKV, H)
     block_table,             # (B, max_blocks)
     block_size: int,
+    k_scale=None, v_scale=None,  # (num_blocks, bs, NKV, 1) int8-pool planes
+    fused: bool = True,
+    gather_blocks: Optional[int] = None,
 ):
     """Single-token block against one layer's slice of the paged pool:
-    scatter the new k/v into pos's (block, offset), then gather the row's
-    blocks in table order — value/position layout identical to the
-    contiguous cache, so attention is bit-identical to block_decode."""
+    scatter the new k/v into pos's (block, offset) — quantizing on the way
+    in when the pool is int8 — then attend through the fused
+    `ops.paged_attention` kernel, which resolves the block table inside
+    the kernel and never materializes a contiguous copy of the pool.
+
+    `fused=False` keeps the original gather-then-attend composition
+    (`paged_gather` → `decode_attention`, value/position layout identical
+    to the contiguous cache) as the reference path for bit-exactness
+    tests; `gather_blocks` clamps its gather to a host-known live-block
+    bound."""
     h = cm.apply_norm(x, p["ln1"], cfg.norm)
     q, k, v = _attention_qkv(p, cfg, h, pos[:, None])
-    pool_k, pool_v = paged_cache_write(
-        pool_k, pool_v, block_table, k, v, pos, block_size
+    pool_k, pool_v, k_scale, v_scale = paged_cache_write(
+        pool_k, pool_v, block_table, k, v, pos, block_size,
+        k_scale=k_scale, v_scale=v_scale,
     )
-    k_rows, v_rows, kpos = paged_gather(pool_k, pool_v, block_table)
-    attn = cm.decode_attention(
-        q, k_rows, v_rows, kpos, pos, softcap=cfg.attn_logit_softcap
-    )
-    return _block_post_attn(p, cfg, x, attn), pool_k, pool_v
+    if fused:
+        from repro.kernels import ops
+
+        attn = ops.paged_attention(
+            q, pool_k, pool_v, block_table, pos,
+            k_scale=k_scale, v_scale=v_scale,
+            softcap=cfg.attn_logit_softcap,
+        )
+    else:
+        k_rows, v_rows, kpos, ks_rows, vs_rows = paged_gather(
+            pool_k, pool_v, block_table, k_scale, v_scale,
+            max_blocks=gather_blocks,
+        )
+        attn = cm.decode_attention(
+            q, k_rows, v_rows, kpos, pos, softcap=cfg.attn_logit_softcap,
+            k_scale=ks_rows, v_scale=vs_rows,
+        )
+    return _block_post_attn(p, cfg, x, attn), pool_k, pool_v, k_scale, v_scale
 
 
 # --------------------------------------------------------------------------
@@ -376,12 +400,18 @@ def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
     return DecodeCache(pos=length, kv=kvc), logits
 
 
-def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array):
+def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array,
+                paged_fused: bool = True,
+                gather_blocks: Optional[int] = None):
     """tokens: (B, 1) → (new_cache, logits (B, 1, V)). cache.pos is (B,):
     each slot decodes at its own position (continuous batching). Dispatches
-    on the cache flavour: contiguous KVCache or block-table PagedKVCache."""
+    on the cache flavour: contiguous KVCache or block-table PagedKVCache
+    (fused paged-attention kernel by default; `paged_fused=False` runs the
+    gather-then-attend reference, optionally clamped to `gather_blocks`)."""
     if isinstance(cache.kv, PagedKVCache):
-        return _decode_step_paged(params, cfg, cache, tokens)
+        return _decode_step_paged(params, cfg, cache, tokens,
+                                  fused=paged_fused,
+                                  gather_blocks=gather_blocks)
     scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
     x = cm.embed_lookup(params["embed"], tokens, scale=scale)
     x = constrain(x, "batch", None, None)
@@ -417,30 +447,48 @@ def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array)
     return new_cache, logits
 
 
-def _decode_step_paged(params, cfg: ModelConfig, cache: DecodeCache, tokens):
+def _decode_step_paged(params, cfg: ModelConfig, cache: DecodeCache, tokens,
+                       fused: bool = True,
+                       gather_blocks: Optional[int] = None):
     """decode_step over the shared block pool: one compiled signature for
-    any mix of slot depths and block-table layouts."""
+    any mix of slot depths and block-table layouts. `fused`/
+    `gather_blocks` select the fused kernel (default) vs the clamped
+    gather-then-attend reference path."""
     scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
     x = cm.embed_lookup(params["embed"], tokens, scale=scale)
     x = constrain(x, "batch", None, None)
     pos = cache.pos
     kv: PagedKVCache = cache.kv
     table = kv.block_table
+    quant = kv.quantized
+    L = cfg.num_layers
 
     def body(xc, layer_in):
-        block_p, pk, pv = layer_in
-        xn, pk, pv = block_decode_paged(
-            block_p, cfg, xc, pos, pk, pv, table, kv.block_size
+        block_p, pk, pv, ks, vs = layer_in
+        xn, pk, pv, ks, vs = block_decode_paged(
+            block_p, cfg, xc, pos, pk, pv, table, kv.block_size,
+            k_scale=ks if quant else None,
+            v_scale=vs if quant else None,
+            fused=fused, gather_blocks=gather_blocks,
         )
-        return xn, (pk, pv)
+        if not quant:
+            ks, vs = layer_in[3], layer_in[4]  # dummy scan placeholders
+        return xn, (pk, pv, ks, vs)
 
-    x, (k_new, v_new) = jax.lax.scan(body, x, (params["blocks"], kv.k, kv.v))
+    ks_in = kv.k_scale if quant else jnp.zeros((L, 0))
+    vs_in = kv.v_scale if quant else jnp.zeros((L, 0))
+    x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+        body, x, (params["blocks"], kv.k, kv.v, ks_in, vs_in)
+    )
     hidden = cm.apply_norm(x, params["final_norm"], cfg.norm)
     logits = compute_logits(params, cfg, hidden)
     new_cache = DecodeCache(
         pos=pos + 1,
         kv=PagedKVCache(k=k_new, v=v_new, block_table=table,
-                        length=kv.length + 1, block_size=kv.block_size),
+                        length=kv.length + 1,
+                        k_scale=ks_new if quant else None,
+                        v_scale=vs_new if quant else None,
+                        block_size=kv.block_size),
     )
     return new_cache, logits
 
@@ -459,15 +507,15 @@ def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
                      block_size: int, max_blocks: int) -> DecodeCache:
     """Empty paged cache: `num_blocks` pool blocks (block 0 = trash) shared
     by `batch` slots of up to `max_blocks` blocks each. Full causal
-    attention only — ring buffers are already window-bounded and the int8
-    cache keeps per-slot scales, so both stay contiguous."""
+    attention only — ring buffers are already window-bounded and stay
+    contiguous. With cfg.kv_cache_quant the pool holds int8 codes plus
+    per-(slot, head) fp32 scale planes (~2× tokens per pooled byte)."""
     if cfg.attn_window:
         raise ValueError("paged KV cache requires full attention "
                          f"(attn_window={cfg.attn_window})")
-    if cfg.kv_cache_quant:
-        raise ValueError("paged KV cache does not support kv_cache_quant")
     kvc = PagedKVCache.init(
         cfg.num_layers, batch, num_blocks, block_size, max_blocks,
         cfg.n_kv_heads, cfg.head_dim, dtype=_dtype(cfg),
+        quantized=cfg.kv_cache_quant,
     )
     return DecodeCache(pos=jnp.zeros((batch,), jnp.int32), kv=kvc)

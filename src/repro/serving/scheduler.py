@@ -143,18 +143,19 @@ class ContinuousScheduler:
         self._prefill_cache = {}
 
         # Cache flavour. Paged needs a full-attention KV cache (ring
-        # buffers are already window-bounded; the int8 cache keeps
-        # per-slot scale planes) — eligible archs default to paged.
+        # buffers are already window-bounded) — eligible archs default to
+        # paged. An int8 cache (cfg.kv_cache_quant) pages too: the pool
+        # carries scale-plane blocks and the fused paged-attention kernel
+        # dequantizes in-kernel.
         init_paged = getattr(self.model, "init_paged_cache", None)
-        can_page = (init_paged is not None and not cfg.attn_window
-                    and not cfg.kv_cache_quant)
+        can_page = init_paged is not None and not cfg.attn_window
         if paged is None:
             paged = can_page
         elif paged and not can_page:
             raise ValueError(
-                f"{cfg.name}: paged KV cache requires a full-attention, "
-                "non-quantized cache (ring buffers and recurrent states "
-                "are already footprint-bounded)"
+                f"{cfg.name}: paged KV cache requires a full-attention "
+                "cache (ring buffers and recurrent states are already "
+                "footprint-bounded)"
             )
         self.paged = paged
         self.block_size = block_size
@@ -331,6 +332,9 @@ class ContinuousScheduler:
                     "reserved_kv_bytes": total}
         per_token = (kv.k.shape[0] * int(np.prod(kv.k.shape[3:]))
                      * 2 * kv.k.dtype.itemsize)
+        if kv.quantized:
+            # int8 pool: add the per-(slot, head) fp32 k/v scale planes.
+            per_token += kv.k.shape[0] * kv.k.shape[3] * 2 * 4
         allocated = self.pool_blocks - len(self._free)
         return {
             "paged": True,

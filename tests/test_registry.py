@@ -13,6 +13,7 @@ from repro.kernels.registry import (
     get_registry,
     pick_fused_blocks,
     pick_matmul_blocks,
+    pick_paged_attention_blocks,
     use_backend,
 )
 
@@ -151,6 +152,53 @@ def test_autotune_caches_winner_and_skips_failures():
                          backend="interpret")
     assert again == win
     assert len(calls) == n_calls  # cached — no re-measurement
+
+
+def test_paged_attention_plan_bh_divides_heads():
+    reg = KernelRegistry()
+    bh, bs, hd = reg.paged_attention_plan(8, 16, 128, "interpret")
+    assert 8 % bh == 0 and (bs, hd) == (16, 128)
+    # Huge working sets shrink bh to a smaller divisor of NKV.
+    bh2, _, _ = pick_paged_attention_blocks(8, 512, 4096)
+    assert 8 % bh2 == 0 and bh2 < 8
+
+
+def test_paged_attention_autotune_candidates_are_divisors():
+    reg = KernelRegistry()
+    seen = []
+    reg.autotune("paged_attention", 6, 16, 64, seen.append,
+                 backend="interpret")
+    assert set(c[0] for c in seen) == {1, 2, 3, 6}
+    assert all(c[1:] == (16, 64) for c in seen)
+
+
+def test_save_and_load_plans_roundtrip(tmp_path):
+    """Satellite: autotune winners survive process restarts via the JSON
+    plan cache."""
+    reg = KernelRegistry()
+    reg.record_plan("bitplane_matmul", 64, 64, 64, (8, 8, 8), "interpret")
+    reg.record_plan("paged_attention", 4, 16, 64, (2, 16, 64), "interpret")
+    reg.matmul_plan(128, 256, 512, "mosaic")  # heuristic entry persists too
+    path = tmp_path / "plans.json"
+    assert reg.save_plans(path) == 3
+
+    fresh = KernelRegistry()
+    assert fresh.load_plans(path) == 3
+    assert fresh.matmul_plan(64, 64, 64, "interpret") == (8, 8, 8)
+    assert fresh.paged_attention_plan(4, 16, 64, "interpret") == (2, 16, 64)
+    assert (fresh.matmul_plan(128, 256, 512, "mosaic")
+            == reg.matmul_plan(128, 256, 512, "mosaic"))
+    # Loaded plans count as cache hits, not misses: no re-planning.
+    info = fresh.cache_info()
+    assert info["plans"] == 3
+
+
+def test_load_plans_rejects_unknown_version(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 99, "plans": []}')
+    reg = KernelRegistry()
+    with pytest.raises(ValueError, match="version"):
+        reg.load_plans(path)
 
 
 def test_custom_backend_registration():
