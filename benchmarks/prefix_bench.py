@@ -1,0 +1,194 @@
+"""Cross-request prefix-cache benchmark: shared-system-prompt serving.
+
+Every request carries the same long system prompt plus a short unique
+tail — the canonical production shape (chat serving, RAG preambles,
+few-shot headers). The same workload is served twice through the
+continuous scheduler's paged pool:
+
+  * prefix-cache ON  (default) — the system prompt's blocks are resident
+    after the first request; later admissions map them into their block
+    tables (refcounted, copy-on-write on append) and prefill only the
+    unique tail.
+  * prefix-cache OFF — every request re-allocates and re-prefills the
+    full prompt (the PR 3/4 behaviour).
+
+Reported per mode: mean time-to-first-token measured at its source (the
+admission step — solo/suffix prefill + first sampled token — timed on an
+idle scheduler, best of several identical passes, so queueing and
+neighbouring decode steps can't pollute it), the wall time of a
+concurrent all-at-once pass, and that pass's peak *live* pool footprint
+(blocks referenced by a row's table — the memory a right-sized pool must
+actually hold). The ON mode must win both TTFT and footprint, and its
+outputs must be greedy bit-identical to the OFF mode's — that equality
+is asserted, so `--quick` doubles as the CI prefix-cache smoke (hit
+rate > 0 + bit-identity vs cold).
+
+Writes BENCH_prefix.json at the repo root (full mode only).
+
+Run:  PYTHONPATH=src python -m benchmarks.prefix_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+
+import jax
+import numpy as np
+
+
+SYS_LEN = 120         # shared system prompt (30 blocks at block_size 4)
+TAIL_LEN = 4          # unique per-request tail
+MAX_NEW = 4
+BLOCK = 4
+REPEATS = 5           # best-of-N admission passes (CPU wall noise ~ the win)
+
+
+def _workload(rng, n, vocab, shared):
+    from repro.serving import Request
+
+    return [
+        Request(rid=i,
+                prompt=np.concatenate(
+                    [shared, rng.integers(0, vocab, TAIL_LEN)]),
+                max_new_tokens=MAX_NEW)
+        for i in range(n)
+    ]
+
+
+def _admission_ms(sched, make_reqs):
+    """Time-to-first-token measured at its source: the admission step
+    (solo prefill or suffix-only prefill + first sampled token), one
+    request at a time on an otherwise idle scheduler so queueing and
+    neighbouring decode steps can't pollute the number. Best of REPEATS
+    identical passes per request index (pass 1 leaves the prefix cache
+    hot — the steady state a long-running server sits in)."""
+    best = None
+    for _ in range(REPEATS):
+        times = []
+        for req in make_reqs():
+            sched.submit(req)
+            t0 = time.perf_counter()
+            sched.step()                  # admit + first decode step
+            times.append(time.perf_counter() - t0)
+            while sched.num_active:
+                sched.step()              # drain before the next request
+        times = np.asarray(times)
+        best = times if best is None else np.minimum(best, times)
+    return best
+
+
+def _serve_concurrent(sched, reqs):
+    """One all-at-once pass (max_batch rows live together): deterministic
+    peak-live-blocks measurement + the output tokens for the bit-identity
+    assert."""
+    sched.reset_pool_peak()
+    t0 = time.perf_counter()
+    done = sched.run(reqs)
+    wall = time.perf_counter() - t0
+    return wall, {r.rid: list(r.out_tokens) for r in done}
+
+
+def run(quick: bool = False) -> dict:
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.serving import ContinuousScheduler
+
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    n = 4 if quick else 8
+    shared = np.random.default_rng(0).integers(0, cfg.vocab, SYS_LEN)
+
+    results = {}
+    tokens = {}
+    for mode, enabled in (("prefix_on", True), ("prefix_off", False)):
+        sched = ContinuousScheduler(
+            cfg, params, max_batch=2, max_ctx=192, bucket=8,
+            paged=True, block_size=BLOCK, prefix_cache=enabled,
+        )
+        # Warmup: compiles every prefill/suffix bucket + the decode step.
+        sched.run(_workload(np.random.default_rng(1), 2, cfg.vocab, shared))
+        base = sched.pool_stats()["prefill_tokens_computed"]
+        adm = _admission_ms(
+            sched,
+            lambda: _workload(np.random.default_rng(7), n, cfg.vocab, shared))
+        adm_tokens = (sched.pool_stats()["prefill_tokens_computed"] - base)
+        wall, tokens[mode] = _serve_concurrent(
+            sched, _workload(np.random.default_rng(7), n, cfg.vocab, shared))
+        stats = sched.pool_stats()
+        results[mode] = {
+            "wall_s": round(wall, 4),
+            "mean_ttft_ms": round(1e3 * float(adm.mean()), 2),
+            "p90_ttft_ms": round(1e3 * float(np.quantile(adm, 0.9)), 2),
+            # Deterministic admission-compute metric (interpret-mode wall
+            # time is not a perf signal — kernel-bench convention): how
+            # many bucketed tokens actually ran through prefill.
+            "admission_prefill_tokens": int(adm_tokens),
+            "peak_live_blocks": stats["peak_allocated_blocks"],
+            "peak_resident_kv_bytes": stats["peak_resident_kv_bytes"],
+        }
+        if enabled:
+            results[mode]["prefix_hit_rate"] = round(
+                stats["prefix_hit_rate"], 3)
+            results[mode]["prefix_hit_blocks"] = stats["prefix_hit_blocks"]
+            results[mode]["cow_copies"] = stats["cow_copies"]
+        emit(f"prefix/{mode}", results[mode]["wall_s"] * 1e6,
+             f"mean_ttft_ms={results[mode]['mean_ttft_ms']} "
+             f"peak_live_blocks={results[mode]['peak_live_blocks']}")
+
+    on, off = results["prefix_on"], results["prefix_off"]
+    assert tokens["prefix_on"] == tokens["prefix_off"], \
+        "prefix-hit outputs diverged from cold outputs"
+    assert on["prefix_hit_rate"] > 0, "shared prompts should hit the cache"
+    summary = {
+        "ttft_speedup": round(off["mean_ttft_ms"]
+                              / max(on["mean_ttft_ms"], 1e-9), 2),
+        "admission_prefill_tokens_ratio": round(
+            off["admission_prefill_tokens"]
+            / max(on["admission_prefill_tokens"], 1), 2),
+        "pool_bytes_ratio": round(
+            off["peak_resident_kv_bytes"]
+            / max(on["peak_resident_kv_bytes"], 1), 2),
+        "bit_identical": True,
+        "prefix_hit_rate": on["prefix_hit_rate"],
+    }
+    assert summary["admission_prefill_tokens_ratio"] > 1
+    assert summary["pool_bytes_ratio"] > 1
+    emit("prefix/summary", 0.0,
+         f"ttft_speedup={summary['ttft_speedup']} "
+         f"prefill_tokens_ratio={summary['admission_prefill_tokens_ratio']} "
+         f"pool_bytes_ratio={summary['pool_bytes_ratio']} "
+         f"hit_rate={summary['prefix_hit_rate']}")
+
+    if quick:
+        return summary
+    bench_path = Path(__file__).resolve().parents[1] / "BENCH_prefix.json"
+    bench_path.write_text(json.dumps({
+        "note": ("reduced olmo-1b on CPU; every request = one shared "
+                 f"{SYS_LEN}-token system prompt + a unique "
+                 f"{TAIL_LEN}-token tail; prefix_on admits via refcounted "
+                 "shared blocks + suffix-only prefill, prefix_off "
+                 "re-prefills the full prompt; outputs asserted greedy "
+                 "bit-identical between the modes"),
+        "config": {"requests": n, "max_batch": 2, "block_size": BLOCK,
+                   "sys_prompt_tokens": SYS_LEN, "tail_tokens": TAIL_LEN,
+                   "max_new_tokens": MAX_NEW},
+        "modes": results,
+        "summary": summary,
+    }, indent=2) + "\n")
+    print(f"wrote {bench_path}")
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

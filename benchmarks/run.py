@@ -16,6 +16,7 @@ from benchmarks import (
     fig11_parallelism_ablation,
     fig12_vs_dsp,
     kernel_bench,
+    prefix_bench,
     quant_error,
     roofline_table,
     serving_bench,
@@ -33,6 +34,7 @@ MODULES = {
     "decode": decode_bench,
     "roofline": roofline_table,
     "serving": serving_bench,
+    "prefix": prefix_bench,
 }
 
 

@@ -245,6 +245,11 @@ def paged_attention(
     The reference backend runs the gather-then-attend oracle
     (:func:`repro.kernels.ref.paged_attention_ref`), which is the
     bit-exactness specification the kernel is tested against.
+
+    The kernel is ownership-agnostic: multiple rows' tables may map to
+    the same pool block (the scheduler's cross-request prefix cache does
+    exactly that), since each row only ever reads blocks through its own
+    table and positions below its own ``q_pos``.
     """
     be = get_registry().resolve(backend)
     if be.is_reference:

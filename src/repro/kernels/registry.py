@@ -178,7 +178,21 @@ _CANDIDATES: Dict[str, Callable[..., list]] = {
 
 
 class KernelRegistry:
-    """Backend registry + memoized per-shape block-plan cache."""
+    """Kernel-backend dispatch + memoized per-shape block-plan cache.
+
+    Every op in `repro.kernels.ops` resolves its backend here: `interpret`
+    (Pallas interpret mode, the CPU default), `mosaic` (TPU lowering), or
+    `reference` (pure-jnp oracles). Select globally with `set_active`,
+    scoped with the `use(name)` / `repro.kernels.use_backend(name)`
+    context manager, or per call via `backend=` on any op; `register(
+    KernelBackend(...))` adds a new backend (e.g. a GPU Triton port) that
+    every call site dispatches to immediately.
+
+    Tiled ops memoize a per-(op, shape, backend) block plan: `plan` serves
+    the heuristic, `autotune` measures candidate plans once and pins the
+    winner, `record_plan` injects measured plans (e.g. a TPU sweep), and
+    `save_plans`/`load_plans` persist the cache as JSON keyed by
+    op/shape/backend so winners survive restarts (`serve --plans FILE`)."""
 
     def __init__(self, backends: Iterable[KernelBackend] = _DEFAULT_BACKENDS):
         self._backends: Dict[str, KernelBackend] = {}

@@ -154,16 +154,26 @@ def chunked_attention(
     v: jax.Array,  # (B, S, NKV, H)
     mask: AttnMask,
     *,
-    q_offset: int = 0,
+    q_offset=0,
     softcap: float = 0.0,
     q_chunk: int = 512,
     kv_chunk: int = 1024,
+    kpos: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Memory-bounded attention; supports GQA, causal, window, prefix-LM.
 
     Sliding-window attention only slices the (window + q_chunk) keys each
     query block can see → compute and memory are O(T·window), not O(T²).
-    """
+
+    By default key slot ``s`` holds absolute position ``s`` and slots at or
+    beyond ``S`` are padding. ``kpos`` (S,) overrides that: each key slot
+    carries an explicit absolute position (−1 = invalid/padding), which is
+    what lets a *suffix* prefill attend over ``[pool-resident prefix KV ++
+    freshly computed suffix KV]`` — the prefix-cache admission path — with
+    exactly the same per-row math as a cold full prefill (real positions
+    stay in order; masked slots contribute exact zeros). ``q_offset`` may
+    be a traced scalar for the same reason (the suffix start position is a
+    runtime value, one compiled signature per shape)."""
     B, T, NQ, H = q.shape
     S = k.shape[1]
     NKV = k.shape[2]
@@ -176,7 +186,7 @@ def chunked_attention(
         q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
     qg = q.reshape(B, Tp // qc, qc, NKV, G, H)
 
-    if mask.window and mask.causal and S > mask.window + qc:
+    if mask.window and mask.causal and S > mask.window + qc and kpos is None:
         return _windowed_attention(
             qg, k, v, mask, q_offset, softcap, scale, qc, T, S
         )
@@ -188,15 +198,24 @@ def chunked_attention(
         v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
     kg = k.reshape(B, Sp // kc, kc, NKV, H)
     vg = v.reshape(B, Sp // kc, kc, NKV, H)
+    if kpos is None:
+        kpos_full = jnp.arange(Sp, dtype=jnp.int32)
+        kvalid_full = kpos_full < S
+    else:
+        kpos_full = jnp.asarray(kpos, jnp.int32)
+        if Sp != S:
+            kpos_full = jnp.pad(kpos_full, (0, Sp - S), constant_values=-1)
+        kvalid_full = kpos_full >= 0
+    kposg = kpos_full.reshape(Sp // kc, kc)
+    kvalidg = kvalid_full.reshape(Sp // kc, kc)
 
     def q_block(qi, qb):
         qpos = q_offset + qi * qc + jnp.arange(qc)
 
         def kv_step(carry, inp):
             m_run, l_run, acc = carry
-            ki, kb, vb = inp
-            kpos = ki * kc + jnp.arange(kc)
-            blk_mask = _mask_block(qpos, kpos, mask) & (kpos < S)[None, :]
+            kposc, kvalc, kb, vb = inp
+            blk_mask = _mask_block(qpos, kposc, mask) & kvalc[None, :]
             s = _sdp_block(qb, kb, vb, blk_mask, softcap, scale)
             m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
             safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -216,7 +235,7 @@ def chunked_attention(
         ks = jnp.moveaxis(kg, 1, 0)
         vs = jnp.moveaxis(vg, 1, 0)
         (m_f, l_f, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0), (jnp.arange(Sp // kc), ks, vs)
+            kv_step, (m0, l0, a0), (kposg, kvalidg, ks, vs)
         )
         out = acc / jnp.maximum(l_f, 1e-30)[..., None]
         return jnp.moveaxis(out, 3, 1)  # (B, qc, NKV, G, H)

@@ -87,6 +87,17 @@ def quantize_kv(x: jax.Array):
     return codes.astype(jnp.int8), scale
 
 
+def dequantize_kv(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """Exact read-side inverse of `quantize_kv`: fp32 ``codes * scale``.
+
+    Every consumer that reads quantized K/V *values* (rather than scoring
+    on raw codes like `decode_attention`) must go through this one helper:
+    the prefix-cache bit-identity contract requires a warm prefill reading
+    pool codes to see the very same floats a cold prefill saw when it read
+    its own freshly quantized K/V."""
+    return codes.astype(jnp.float32) * scale
+
+
 def ring_align(k_full, v_full, lengths, window: int):
     """Pack full-sequence prefill K/V (L, B, S, NKV, H) into the ring-buffer
     invariant used by cache_write: position p lives at slot p % window.
@@ -192,7 +203,15 @@ class PagedKVCache:
     the block pool): k/v hold int8 codes and k_scale/v_scale hold
     per-(slot, head) fp32 scale planes (L, num_blocks, block_size, NKV, 1)
     written by the quantizing `paged_cache_write` — roughly 2× the tokens
-    per pooled byte."""
+    per pooled byte.
+
+    Pool blocks have no intrinsic owner: nothing stops two rows' tables
+    from mapping to the same pool block, which is exactly how the
+    cross-request prefix cache shares prompt-prefix blocks (scale planes
+    included for an int8 pool). Ownership lives host-side in the
+    scheduler's allocator — per-block reference counts, an LRU of
+    unreferenced-but-cached prefix blocks, and copy-on-write
+    (`copy_pool_block`) before a row appends into a shared block."""
 
     k: jax.Array
     v: jax.Array
@@ -489,6 +508,107 @@ def scatter_into_paged(batch: DecodeCache, solo: DecodeCache, slot,
     return DecodeCache(pos=pos, kv=PagedKVCache(
         k=k, v=v, block_table=table, length=length,
         k_scale=ks, v_scale=vs, block_size=bs))
+
+
+def scatter_suffix_into_paged(batch: DecodeCache, solo: DecodeCache, slot,
+                              row_blocks, start_block) -> DecodeCache:
+    """Admit a *suffix-only* prefill (prefix-cache hit) into the paged
+    pool. `solo` holds only the uncached tail of the prompt: its cache
+    slot ``t`` corresponds to absolute position ``start_block·bs + t``
+    (suffix writes always begin at a block boundary — only whole prompt
+    blocks are ever shared), so virtual block ``start_block + j`` of the
+    suffix goes to pool block ``row_blocks[start_block + j]``. Entries
+    past the allocated span are -1 and land in the trash block, exactly
+    like `scatter_into_paged`'s right-pad handling.
+
+    ``slot`` and ``start_block`` may be traced; ``row_blocks`` is the
+    full (max_blocks,) block-table row — shared prefix blocks included —
+    which is written to the device table alongside the suffix data."""
+    kv: PagedKVCache = batch.kv
+    bs = kv.block_size
+    s_solo = solo.kv.k.shape[2]
+    nb = -(-s_solo // bs)
+    pad = nb * bs - s_solo
+
+    def as_blocks(a):
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 3))
+        return a[:, 0].reshape(a.shape[0], nb, bs, *a.shape[3:])
+
+    slot = jnp.asarray(slot, jnp.int32)
+    row_blocks = jnp.asarray(row_blocks, jnp.int32)
+    start_block = jnp.asarray(start_block, jnp.int32)
+    dst = jnp.maximum(
+        jnp.take(row_blocks, start_block + jnp.arange(nb), mode="fill",
+                 fill_value=-1), 0
+    )
+    k = kv.k.at[:, dst].set(as_blocks(solo.kv.k).astype(kv.k.dtype))
+    v = kv.v.at[:, dst].set(as_blocks(solo.kv.v).astype(kv.v.dtype))
+    ks = vs = None
+    if kv.quantized:
+        ks = kv.k_scale.at[:, dst].set(
+            as_blocks(solo.kv.k_scale).astype(kv.k_scale.dtype))
+        vs = kv.v_scale.at[:, dst].set(
+            as_blocks(solo.kv.v_scale).astype(kv.v_scale.dtype))
+    table = jax.lax.dynamic_update_slice(
+        kv.block_table, row_blocks[None, : kv.blocks_per_row], (slot, 0)
+    )
+    length = jax.lax.dynamic_update_slice(
+        kv.length, solo.kv.length.astype(kv.length.dtype), (slot,)
+    )
+    pos = jax.lax.dynamic_update_slice(
+        batch.pos, solo.pos.astype(batch.pos.dtype), (slot,)
+    )
+    return DecodeCache(pos=pos, kv=PagedKVCache(
+        k=k, v=v, block_table=table, length=length,
+        k_scale=ks, v_scale=vs, block_size=bs))
+
+
+def set_paged_row(batch: DecodeCache, solo: DecodeCache, slot,
+                  row_blocks) -> DecodeCache:
+    """Admission metadata write for a *fully* prefix-cached prompt: every
+    prompt position is already resident in shared pool blocks, so only the
+    row's block table, length, and decode position change — no KV data
+    moves. (`solo` is the one-token logits prefill; only its length/pos
+    leaves are read.)"""
+    kv: PagedKVCache = batch.kv
+    slot = jnp.asarray(slot, jnp.int32)
+    row_blocks = jnp.asarray(row_blocks, jnp.int32)
+    table = jax.lax.dynamic_update_slice(
+        kv.block_table, row_blocks[None, : kv.blocks_per_row], (slot, 0)
+    )
+    length = jax.lax.dynamic_update_slice(
+        kv.length, solo.kv.length.astype(kv.length.dtype), (slot,)
+    )
+    pos = jax.lax.dynamic_update_slice(
+        batch.pos, solo.pos.astype(batch.pos.dtype), (slot,)
+    )
+    return DecodeCache(pos=pos, kv=dataclasses.replace(
+        kv, block_table=table, length=length))
+
+
+def copy_pool_block(cache: DecodeCache, src, dst) -> DecodeCache:
+    """Copy-on-write support: duplicate pool block `src` into `dst` across
+    every layer (k, v, and the int8 scale planes when present). The
+    allocator calls this before a row appends into a block it shares with
+    other rows or with the prefix cache — the sharers keep reading the
+    pristine block, the appender writes into its private copy. Copying the
+    whole block (appended slots included) is safe: a row only ever reads
+    slots below its own position, and its next writes overwrite the rest.
+
+    `src`/`dst` may be traced scalars — one compiled copy serves every
+    (src, dst) pair."""
+    kv: PagedKVCache = cache.kv
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    k = kv.k.at[:, dst].set(kv.k[:, src])
+    v = kv.v.at[:, dst].set(kv.v[:, src])
+    ks = vs = None
+    if kv.quantized:
+        ks = kv.k_scale.at[:, dst].set(kv.k_scale[:, src])
+        vs = kv.v_scale.at[:, dst].set(kv.v_scale[:, src])
+    return dataclasses.replace(cache, kv=dataclasses.replace(
+        kv, k=k, v=v, k_scale=ks, v_scale=vs))
 
 
 def grow_cache(cache: DecodeCache, size: int) -> DecodeCache:

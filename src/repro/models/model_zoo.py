@@ -67,6 +67,18 @@ def build_model(cfg: ModelConfig) -> SimpleNamespace:
             mod.init_paged_cache(cfg, batch, num_blocks, block_size,
                                  max_blocks)
         )
+    if (hasattr(mod, "prefill_suffix") and not cfg.attn_window
+            and not cfg.moe_experts and cfg.frontend == "none"):
+        # Suffix-only prefill against pool-resident prefix K/V — the
+        # compute half of the scheduler's cross-request prefix cache.
+        # Only where it is bit-identical to cold prefill: full-attention
+        # token-input transformers. MoE routing is capacity-bounded
+        # across the whole token batch (not per-row reproducible), and
+        # frontend/prefix-LM archs need masks prefill_suffix doesn't
+        # build — so those archs simply don't advertise the capability.
+        ns.prefill_suffix = (
+            lambda params, batch: mod.prefill_suffix(params, cfg, batch)
+        )
     return ns
 
 

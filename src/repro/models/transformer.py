@@ -121,21 +121,52 @@ def _attention_qkv(p, cfg: ModelConfig, x, positions):
     return q, k, v
 
 
+def _kv_attn_view(k, v, kv_quant_attn: bool):
+    """The K/V values attention actually reads. For an int8 KV cache the
+    prefill reads its own K/V *through the quantizer* (quantize →
+    dequantize), so attending over codes later gathered from the cache —
+    the cross-request prefix-cache admission path — is bit-identical to
+    attending over the in-flight prefill K/V: both sides see exactly
+    `dequantize_kv(quantize_kv(kv))`, and quantization is deterministic
+    per (token, head). Without kv_cache_quant this is the identity."""
+    if not kv_quant_attn:
+        return k, v
+    from repro.models.kv_cache import dequantize_kv, quantize_kv
+
+    return dequantize_kv(*quantize_kv(k)), dequantize_kv(*quantize_kv(v))
+
+
 def block_apply(
     p: dict,
     cfg: ModelConfig,
     x: jax.Array,
     positions: jax.Array,
     mask: cm.AttnMask,
+    kv_quant_attn: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Full-sequence block (train / prefill). Returns (x, k, v, aux_loss)."""
+    """Full-sequence block (train / prefill). Returns (x, k, v, aux_loss).
+
+    `kv_quant_attn` (prefill with an int8 KV cache only) makes attention
+    read K/V through the quantizer — see `_kv_attn_view`; the returned
+    k/v stay unquantized (the cache quantizes them once, at the end of
+    prefill, with the same deterministic `quantize_kv`)."""
     h = cm.apply_norm(x, p["ln1"], cfg.norm)
     q, k, v = _attention_qkv(p, cfg, h, positions)
+    k_att, v_att = _kv_attn_view(k, v, kv_quant_attn)
     attn = cm.chunked_attention(
-        q, k, v, mask, softcap=cfg.attn_logit_softcap,
+        q, k_att, v_att, mask, softcap=cfg.attn_logit_softcap,
         q_chunk=min(cfg.attn_q_chunk, q.shape[1]),
         kv_chunk=min(cfg.attn_kv_chunk, k.shape[1]),
     )
+    x, aux = _block_post_attn_seq(p, cfg, x, attn)
+    return x, k, v, aux
+
+
+def _block_post_attn_seq(p: dict, cfg: ModelConfig, x, attn):
+    """Full-sequence post-attention tail (output projection + FFN/MoE
+    residual), shared by `block_apply` and `prefill_suffix` — one copy so
+    the warm (suffix) path can never drift from the cold path. Returns
+    (x, aux_loss)."""
     attn = attn.reshape(*x.shape[:2], cfg.n_heads * cfg.head_dim)
     x = x + cm.linear(attn, p["wo"], cfg.quant, "fake" if cfg.quant else "none")
     h2 = cm.apply_norm(x, p["ln2"], cfg.norm)
@@ -145,7 +176,7 @@ def block_apply(
         y, aux = cm.ffn_apply(p["ffn"], h2, cfg), jnp.zeros((), jnp.float32)
     x = x + y
     x = constrain(x, "batch", None, None)
-    return x, k, v, aux
+    return x, aux
 
 
 def block_decode(
@@ -251,9 +282,16 @@ def block_decode_paged(
 # --------------------------------------------------------------------------
 
 
+def _embed_scale(cfg: ModelConfig) -> bool:
+    """Whether token embeddings are scaled by sqrt(d_model) at lookup —
+    one rule for every path (train/prefill/suffix-prefill/decode); the
+    warm ≡ cold bit-identity contract depends on these agreeing."""
+    return cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
+
+
 def embed_inputs(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
     """Returns (x (B, T, d), positions (B, T)) handling frontend stubs."""
-    scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
+    scale = _embed_scale(cfg)
     if cfg.frontend == "patch_stub":
         patches = batch["patches"].astype(_dtype(cfg))  # (B, P, frontend_dim)
         pe = cm.linear(patches, params["patch_proj"])
@@ -283,10 +321,12 @@ def _mask_for(cfg: ModelConfig) -> cm.AttnMask:
 # --------------------------------------------------------------------------
 
 
-def _scan_blocks(params, cfg, x, positions, mask, collect_kv: bool):
+def _scan_blocks(params, cfg, x, positions, mask, collect_kv: bool,
+                 kv_quant_attn: bool = False):
     def body(carry, block_p):
         xc, aux = carry
-        xn, k, v, a = block_apply(block_p, cfg, xc, positions, mask)
+        xn, k, v, a = block_apply(block_p, cfg, xc, positions, mask,
+                                  kv_quant_attn)
         out = (k, v) if collect_kv else None
         return (xn, aux + a), out
 
@@ -359,7 +399,8 @@ def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
     lengths = batch.get("lengths")
     if lengths is not None:
         lengths = jnp.asarray(lengths, jnp.int32)
-    x, _, kv = _scan_blocks(params, cfg, x, positions, _mask_for(cfg), True)
+    x, _, kv = _scan_blocks(params, cfg, x, positions, _mask_for(cfg), True,
+                            kv_quant_attn=cfg.kv_cache_quant)
     k_all, v_all = kv  # (L, B, S, NKV, H)
     w = cfg.attn_window
     if w:
@@ -400,6 +441,104 @@ def prefill(params, cfg: ModelConfig, batch) -> Tuple[DecodeCache, jax.Array]:
     return DecodeCache(pos=length, kv=kvc), logits
 
 
+def prefill_suffix(params, cfg: ModelConfig, batch):
+    """Prefill only the *uncached tail* of a prompt against prefix K/V
+    already resident in the paged block pool — the compute half of the
+    cross-request prefix cache (the memory half is block sharing in the
+    scheduler's allocator). Each layer gathers its prefix K/V straight
+    from the pool blocks, the suffix computes q/k/v at its true absolute
+    positions, and attention runs over ``[prefix KV ++ suffix KV]`` with
+    explicit key positions — per-row math identical to the cold full
+    prefill, so a prefix-hit request's tokens are bit-identical to a cold
+    request's (int8 pools included: both sides read K/V through
+    `dequantize_kv`/`quantize_kv`, see `_kv_attn_view`).
+
+    ``batch`` keys:
+      tokens (1, Ls)        right-padded suffix token ids
+      lengths (1,)          real suffix length
+      start ()              absolute position of the first suffix token ==
+                            number of prefix positions resident in the pool
+      pool_k / pool_v       (L, num_blocks, bs, NKV, H) pool planes
+      prefix_blocks (mb,)   the row's pool blocks covering positions
+                            [0, start) in virtual-block order; -1 entries
+                            gather the trash block and are masked out
+      pool_k_scale / pool_v_scale   int8-pool scale planes (quantized only)
+
+    Returns ``(DecodeCache, logits)``; the solo cache holds ONLY the
+    suffix: cache slot ``t`` ↔ absolute position ``start + t`` (see
+    `kv_cache.scatter_suffix_into_paged`), and ``pos``/``length`` carry
+    the full row length ``start + lengths``."""
+    if cfg.attn_window:
+        raise ValueError("prefix caching requires a full-attention cache")
+    tokens = batch["tokens"]
+    B, Ls = tokens.shape
+    lengths = jnp.asarray(batch["lengths"], jnp.int32)
+    start = jnp.asarray(batch["start"], jnp.int32)
+    pool_k, pool_v = batch["pool_k"], batch["pool_v"]
+    blocks = jnp.asarray(batch["prefix_blocks"], jnp.int32)
+    L = cfg.num_layers
+    bs = pool_k.shape[2]
+    P = blocks.shape[0] * bs
+    quant = cfg.kv_cache_quant
+
+    from repro.models.kv_cache import dequantize_kv, quantize_kv
+
+    tbl = jnp.maximum(blocks, 0)
+    pk = pool_k[:, tbl].reshape(L, P, *pool_k.shape[3:])
+    pv = pool_v[:, tbl].reshape(L, P, *pool_v.shape[3:])
+    if quant:
+        ksc = batch["pool_k_scale"][:, tbl].reshape(L, P, cfg.n_kv_heads, 1)
+        vsc = batch["pool_v_scale"][:, tbl].reshape(L, P, cfg.n_kv_heads, 1)
+        pk = dequantize_kv(pk, ksc)
+        pv = dequantize_kv(pv, vsc)
+
+    ppos = jnp.arange(P, dtype=jnp.int32)
+    prefix_kpos = jnp.where(ppos < start, ppos, -1)
+    spos = start + jnp.arange(Ls, dtype=jnp.int32)
+    suffix_kpos = jnp.where(jnp.arange(Ls) < lengths[0], spos, -1)
+    kpos_cat = jnp.concatenate([prefix_kpos, suffix_kpos])
+    positions = jnp.broadcast_to(spos[None], (B, Ls))
+    mask = cm.AttnMask(causal=cfg.causal)
+
+    x = cm.embed_lookup(params["embed"], tokens, scale=_embed_scale(cfg))
+    x = constrain(x, "batch", None, None)
+
+    def body(xc, layer_in):
+        block_p, pk_l, pv_l = layer_in
+        h = cm.apply_norm(xc, block_p["ln1"], cfg.norm)
+        q, k, v = _attention_qkv(block_p, cfg, h, positions)
+        k_att, v_att = _kv_attn_view(k, v, quant)
+        k_cat = jnp.concatenate([pk_l[None].astype(k_att.dtype), k_att], axis=1)
+        v_cat = jnp.concatenate([pv_l[None].astype(v_att.dtype), v_att], axis=1)
+        attn = cm.chunked_attention(
+            q, k_cat, v_cat, mask, q_offset=start, kpos=kpos_cat,
+            softcap=cfg.attn_logit_softcap,
+            q_chunk=min(cfg.attn_q_chunk, Ls),
+            kv_chunk=min(cfg.attn_kv_chunk, P + Ls),
+        )
+        xn, _ = _block_post_attn_seq(block_p, cfg, xc, attn)
+        return xn, (k, v)
+
+    x, (k_all, v_all) = jax.lax.scan(body, x, (params["blocks"], pk, pv))
+    if quant:
+        k_all, k_scale = quantize_kv(k_all)
+        v_all, v_scale = quantize_kv(v_all)
+    else:
+        k_all = k_all.astype(_dtype(cfg))
+        v_all = v_all.astype(_dtype(cfg))
+        k_scale = v_scale = None
+    total = start + lengths
+    kvc = KVCache(
+        k=k_all, v=v_all,
+        slot_pos=jnp.broadcast_to(suffix_kpos[None, None], (L, B, Ls)),
+        length=total, k_scale=k_scale, v_scale=v_scale, window=0,
+    )
+    hidden = cm.apply_norm(cm.last_token_slice(x, lengths),
+                           params["final_norm"], cfg.norm)
+    logits = compute_logits(params, cfg, hidden)
+    return DecodeCache(pos=total, kv=kvc), logits
+
+
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array,
                 paged_fused: bool = True,
                 gather_blocks: Optional[int] = None):
@@ -412,8 +551,7 @@ def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array,
         return _decode_step_paged(params, cfg, cache, tokens,
                                   fused=paged_fused,
                                   gather_blocks=gather_blocks)
-    scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
-    x = cm.embed_lookup(params["embed"], tokens, scale=scale)
+    x = cm.embed_lookup(params["embed"], tokens, scale=_embed_scale(cfg))
     x = constrain(x, "batch", None, None)
     pos = cache.pos
 
@@ -454,8 +592,7 @@ def _decode_step_paged(params, cfg: ModelConfig, cache: DecodeCache, tokens,
     any mix of slot depths and block-table layouts. `fused`/
     `gather_blocks` select the fused kernel (default) vs the clamped
     gather-then-attend reference path."""
-    scale = cfg.family in ("vlm",) or cfg.name.startswith("recurrentgemma")
-    x = cm.embed_lookup(params["embed"], tokens, scale=scale)
+    x = cm.embed_lookup(params["embed"], tokens, scale=_embed_scale(cfg))
     x = constrain(x, "batch", None, None)
     pos = cache.pos
     kv: PagedKVCache = cache.kv

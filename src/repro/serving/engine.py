@@ -11,7 +11,8 @@ execution modes:
     slots mid-decode, per-slot EOS/max_new retirement, on-device sampling,
     and (for full-attention archs, by default) the paged block-pool KV
     cache — admission is bounded by actual resident tokens, not a per-slot
-    `max_ctx` reservation.
+    `max_ctx` reservation — with cross-request prefix caching on top
+    (shared refcounted prompt-prefix blocks, suffix-only prefill).
   * `generate_static` — the classic static batch (batched prefill → decode
     loop, finished slots masked), kept as the baseline the serving
     benchmark measures continuous batching against. The decode loop exits
@@ -59,6 +60,7 @@ class ServingEngine:
         paged: Optional[bool] = None,
         block_size: int = 16,
         pool_blocks: Optional[int] = None,
+        prefix_cache: Optional[bool] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -75,6 +77,7 @@ class ServingEngine:
         self.paged = paged                  # None = auto (paged if eligible)
         self.block_size = block_size
         self.pool_blocks = pool_blocks
+        self.prefix_cache = prefix_cache    # None = auto (on if paged-able)
         self._sched: Optional[ContinuousScheduler] = None
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
@@ -105,6 +108,7 @@ class ServingEngine:
                 max_ctx=need, quant=None, bucket=self.bucket, seed=self.seed,
                 on_token=self.on_token, paged=self.paged,
                 block_size=self.block_size, pool_blocks=self.pool_blocks,
+                prefix_cache=self.prefix_cache,
             )
         self._sched.on_token = self.on_token  # pick up late reassignment
         return self._sched

@@ -38,6 +38,18 @@ Design:
   * Per-slot decode state: ``DecodeCache.pos``/``KVCache.slot_pos``/
     ``length`` all carry a batch axis; each slot's position advances
     independently of its neighbours.
+  * Cross-request prefix caching (paged transformer archs, default on):
+    a host-side index maps chain-hashes of block-sized token chunks to
+    resident pool blocks, so a request whose prompt prefix was already
+    prefilled — same system prompt, retried request — maps those blocks
+    into its table instead of re-allocating and re-prefilling them.
+    Ownership becomes refcounted: blocks are shared between rows,
+    retirement *decrefs* instead of frees, unreferenced prefix blocks are
+    retained in an LRU (freed lazily, evicted only under pool pressure),
+    and a row that must append into a block it shares copies it first
+    (copy-on-write). Admission prefills only the uncached suffix
+    (``prefill_suffix``) and is still greedy bit-identical to a cold
+    request — bf16 and int8 pools, solo / static / mid-decode admission.
   * Sampling: vectorized on-device greedy / temperature / top-k with
     per-slot parameters and per-request ``(seed, rid)``-derived PRNG
     streams (``repro.serving.sampling``).
@@ -51,8 +63,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import time
-from typing import Callable, Deque, List, Optional, Union
+from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -66,8 +79,11 @@ from repro.models import build_model
 from repro.models.kv_cache import (
     KVCache,
     PagedKVCache,
+    copy_pool_block,
     scatter_into_paged,
     scatter_into_slot,
+    scatter_suffix_into_paged,
+    set_paged_row,
 )
 from repro.serving import sampling
 
@@ -109,6 +125,18 @@ class Request:
 
 
 class ContinuousScheduler:
+    """Continuous-batching scheduler (see the module docstring for the
+    full design). Drive it by queueing `Request`s with `submit()` and
+    advancing with `step()`, or hand a whole workload to `run()`.
+
+    Keyword knobs: ``max_batch`` decode slots, ``max_ctx`` per-request
+    position bound, ``bucket`` prefill padding granularity, ``paged``
+    (None = auto: paged whenever the arch has a full-attention cache),
+    ``block_size``/``pool_blocks`` pool geometry, and ``prefix_cache``
+    (None = auto: on whenever the cache is paged and the arch supports
+    suffix-only prefill — dense/token transformers; explicit True raises
+    if unsupported)."""
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -123,6 +151,7 @@ class ContinuousScheduler:
         paged: Optional[bool] = None,
         block_size: int = 16,
         pool_blocks: Optional[int] = None,
+        prefix_cache: Optional[bool] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -160,6 +189,24 @@ class ContinuousScheduler:
         self.paged = paged
         self.block_size = block_size
 
+        # Prefix caching rides on the paged pool (shared blocks need block
+        # tables + host-side ownership) and on suffix-only prefill; archs
+        # where that is bit-identical to cold prefill advertise it as
+        # `prefill_suffix` (model_zoo owns the eligibility rule).
+        can_prefix = (
+            paged
+            and getattr(self.model, "prefill_suffix", None) is not None
+        )
+        if prefix_cache is None:
+            prefix_cache = can_prefix
+        elif prefix_cache and not can_prefix:
+            raise ValueError(
+                f"{cfg.name}: prefix caching requires the paged KV cache "
+                "and an arch with suffix-only prefill (token-input, "
+                "non-MoE full-attention transformer)"
+            )
+        self.prefix_cache = prefix_cache
+
         B = max_batch
         if paged:
             # Per-row virtual capacity = max_ctx rounded up to blocks; the
@@ -178,11 +225,34 @@ class ContinuousScheduler:
             # agree on which requests fit.
             self._capacity = max_ctx
             self._free: List[int] = list(range(usable, 0, -1))
-            self._avail = usable          # free minus outstanding reservations
+            # free + LRU-retained minus outstanding reservations: what
+            # admission can still promise without deadlocking a live row.
+            self._avail = usable
             self._reserved = np.zeros((B,), np.int64)
             self._block_tab = np.full((B, self._max_blocks), -1, np.int32)
             self._table_dirty = False
             self._peak_blocks = 0
+            # -- prefix-cache / refcount state (host-side ownership) --
+            self._refcnt = np.zeros((usable + 1,), np.int64)
+            self._prefix_index: Dict[bytes, int] = {}   # chunk hash → block
+            self._block_hash: Dict[int, bytes] = {}     # block → its hash
+            self._lru: collections.OrderedDict = collections.OrderedDict()
+            self._slot_hashes: List = [None] * B        # (full, partial)/slot
+            self._suffix_cache = {}
+            self._scatter_suffix = jax.jit(scatter_suffix_into_paged,
+                                           donate_argnums=(0,))
+            self._set_row = jax.jit(set_paged_row, donate_argnums=(0,))
+            self._cow = jax.jit(copy_pool_block, donate_argnums=(0,))
+            self.prefix_hit_blocks = 0
+            self.prefix_hit_tokens = 0
+            self.prompt_tokens_seen = 0
+            self.cow_copies = 0
+            self.prefix_evictions = 0
+            # Bucketed tokens actually run through prefill at admission —
+            # the deterministic admission-compute metric (a prefix hit
+            # prefills only its suffix bucket; wall time on the interpret
+            # backend is not a perf signal, this is).
+            self.prefill_tokens_computed = 0
         else:
             # Fixed-shape contiguous state: every slot reserves a full
             # max_ctx(+headroom) row for its whole lifetime.
@@ -220,7 +290,10 @@ class ContinuousScheduler:
         return len(self.waiting)
 
     def submit(self, req: Request) -> None:
-        """Queue a request for admission into the next free slot."""
+        """Queue a request for admission into the next free slot (FIFO;
+        admission itself happens inside `step()` — including the prefix
+        lookup, so a request submitted now can hit blocks that another
+        request makes resident before a slot frees)."""
         self.waiting.append(req)
 
     def _bucketed(self, n: int) -> int:
@@ -270,27 +343,84 @@ class ContinuousScheduler:
                     "raise max_ctx")
         return None
 
-    def _alloc_block(self, slot: int, j: int) -> None:
-        if not self._free:
+    @property
+    def _live_blocks(self) -> int:
+        """Pool blocks referenced by at least one row's table (LRU-retained
+        prefix blocks are resident but reclaimable, so they don't count)."""
+        return self.pool_blocks - len(self._free) - len(self._lru)
+
+    def _touch_peak(self) -> None:
+        self._peak_blocks = max(self._peak_blocks, self._live_blocks)
+
+    def _evict_lru(self) -> None:
+        """Reclaim the least-recently-used retained prefix block: drop its
+        index entry and hand the block back to the free list. Only
+        refcount-0 blocks ever sit in the LRU, so eviction can never pull
+        a block out from under a live row or an admission reservation
+        (`_avail` already counts LRU blocks as reclaimable)."""
+        if not self._lru:
             raise RuntimeError(
                 "paged pool invariant violated: reservation accounting "
-                "should guarantee a free block"
+                "should guarantee a free or evictable block"
             )
-        self._block_tab[slot, j] = self._free.pop()
+        blk, _ = self._lru.popitem(last=False)
+        h = self._block_hash.pop(blk, None)
+        if h is not None:
+            self._prefix_index.pop(h, None)
+        self.prefix_evictions += 1
+        self._free.append(blk)
+
+    def _take_free_block(self) -> int:
+        if not self._free:
+            self._evict_lru()
+        return self._free.pop()
+
+    def _alloc_block(self, slot: int, j: int) -> None:
+        blk = self._take_free_block()
+        self._refcnt[blk] = 1
+        self._block_tab[slot, j] = blk
         self._reserved[slot] -= 1
         self._table_dirty = True
-        self._peak_blocks = max(self._peak_blocks,
-                                self.pool_blocks - len(self._free))
+        self._touch_peak()
+
+    def _decref(self, blk: int) -> None:
+        """Drop one table reference. At refcount 0 a prefix-cached block is
+        *retained* (LRU, evicted lazily under pool pressure so a repeat of
+        the same prompt still hits); an uncached block frees immediately."""
+        self._refcnt[blk] -= 1
+        if self._refcnt[blk] == 0:
+            if blk in self._block_hash:
+                self._lru[blk] = None        # most-recently-used end
+            else:
+                self._free.append(blk)
+            self._avail += 1
 
     def _alloc_boundary_blocks(self) -> None:
-        """Allocate the block backing the position each live slot writes
-        this step (a no-op except on block-boundary crossings)."""
+        """Back the position each live slot writes this step: allocate on a
+        block-boundary crossing, and copy-on-write when the write lands in
+        a block the row shares (refcount > 1) with other rows or with the
+        prefix cache — the sharers keep the pristine block, the appender
+        gets a private copy (charged to its reservation like any other
+        allocation)."""
         for b, req in enumerate(self._slots):
             if req is None:
                 continue
             j = int(self._pos_host[b]) // self.block_size
-            if j < self._max_blocks and self._block_tab[b, j] < 0:
+            if j >= self._max_blocks:
+                continue
+            blk = int(self._block_tab[b, j])
+            if blk < 0:
                 self._alloc_block(b, j)
+            elif self._refcnt[blk] > 1:
+                dst = self._take_free_block()
+                self._refcnt[dst] = 1
+                self.cache = self._cow(self.cache, blk, dst)
+                self._block_tab[b, j] = dst
+                self._decref(blk)
+                self._reserved[b] -= 1
+                self._table_dirty = True
+                self.cow_copies += 1
+                self._touch_peak()
 
     def _sync_table(self) -> None:
         if self._table_dirty:
@@ -303,16 +433,135 @@ class ContinuousScheduler:
             self._table_dirty = False
 
     def _release_slot(self, b: int) -> None:
+        """Retire row `b`: *decref* its blocks (shared prefix blocks stay
+        live under their other referencers; last-reference prefix blocks
+        are retained in the LRU; everything else frees) and return its
+        unclaimed reservation. The row's partial last prompt block is
+        registered in the prefix index here — not at admission — because a
+        live row appends into that block in place; once the row stops
+        writing, the block's first `len % block_size` slots are immutable
+        and safe to share."""
         self._slots[b] = None
         if not self.paged:
             return
+        if self.prefix_cache:
+            self._register_partial(b)
+        self._slot_hashes[b] = None
         row = self._block_tab[b]
-        used = row[row >= 0]
-        self._free.extend(int(x) for x in used)
+        for blk in row[row >= 0]:
+            self._decref(int(blk))
         row[:] = -1
-        self._avail += len(used) + int(self._reserved[b])
+        self._avail += int(self._reserved[b])
         self._reserved[b] = 0
         self._table_dirty = True
+
+    # -- prefix cache: hash index, matching, claiming, registration --------
+
+    def _hash_chunks(self, prompt) -> Tuple[List[bytes], Optional[bytes]]:
+        """Chain-hashes of the prompt at block granularity: one digest per
+        *full* block-sized token chunk (each digest covers every token up
+        to and including its chunk, so a hit at chunk j implies the whole
+        prefix matches) plus one for the trailing partial chunk, tagged so
+        a partial run never aliases a full block."""
+        toks = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        bs = self.block_size
+        full, h = [], b"m4bram-prefix"
+        for j in range(len(toks) // bs):
+            h = hashlib.blake2b(h + toks[j * bs:(j + 1) * bs].tobytes(),
+                                digest_size=16).digest()
+            full.append(h)
+        r = len(toks) % bs
+        partial = (
+            hashlib.blake2b(h + toks[len(toks) - r:].tobytes() + b"#partial",
+                            digest_size=16).digest()
+            if r else None
+        )
+        return full, partial
+
+    def _req_hashes(self, req: Request) -> Tuple[List[bytes], Optional[bytes]]:
+        """Chain hashes for `req`, memoized on the request object — the
+        pool-full path re-checks the queue head every step, and the
+        digests depend only on (prompt, block_size)."""
+        cached = getattr(req, "_prefix_hashes", None)
+        if cached is None or cached[0] != self.block_size:
+            cached = (self.block_size, self._hash_chunks(req.prompt))
+            req._prefix_hashes = cached
+        return cached[1]
+
+    def _match_prefix(self, req: Request):
+        """Longest resident prefix for `req` — pure lookup, no allocator
+        mutation. Returns (hits [(virtual j, pool block)], resident token
+        count, revive count = hits that must leave the LRU, reservation =
+        blocks the row may still allocate: uncovered virtual blocks plus
+        one for a potential copy-on-write of a shared partial block,
+        hashes = the (full, partial) chain digests, reused at
+        registration time)."""
+        need = self._need_blocks(req)
+        if not self.prefix_cache:
+            return [], 0, 0, need, None
+        hashes = self._req_hashes(req)
+        full, partial = hashes
+        hits: List[Tuple[int, int]] = []
+        for j, h in enumerate(full):
+            blk = self._prefix_index.get(h)
+            if blk is None:
+                break
+            hits.append((j, blk))
+        full_hits = len(hits)
+        resident = full_hits * self.block_size
+        if full_hits == len(full) and partial is not None:
+            blk = self._prefix_index.get(partial)
+            if blk is not None:
+                hits.append((full_hits, blk))
+                resident = len(req.prompt)
+        revive = sum(1 for _, b in hits if self._refcnt[b] == 0)
+        return hits, resident, revive, need - full_hits, hashes
+
+    def _claim_hits(self, slot: int, hits) -> None:
+        """Map matched pool blocks into row `slot`'s table, incref'ing
+        each; refcount-0 blocks are revived out of the LRU (which consumes
+        one unit of reclaimable capacity — accounted against `_avail`)."""
+        for j, blk in hits:
+            if self._refcnt[blk] == 0:
+                self._lru.pop(blk)
+                self._avail -= 1
+            self._refcnt[blk] += 1
+            self._block_tab[slot, j] = blk
+        if hits:
+            self._table_dirty = True
+
+    def _register_full(self, slot: int) -> None:
+        """Index row `slot`'s full prompt blocks at admission (their
+        content is final the moment the prompt KV is scattered — appends
+        only ever land past the prompt)."""
+        full, _ = self._slot_hashes[slot]
+        for j, h in enumerate(full):
+            blk = int(self._block_tab[slot, j])
+            if blk < 0 or h in self._prefix_index or blk in self._block_hash:
+                continue
+            self._prefix_index[h] = blk
+            self._block_hash[blk] = h
+
+    def _register_partial(self, slot: int) -> None:
+        """Index the trailing partial prompt block at *retirement*. While
+        the row lives it appends decode tokens into this block in place;
+        deferring registration means a live row's partial block is never
+        shared, so in-place appends need no reservation headroom beyond
+        the exact `need - full_hits` the allocator holds."""
+        if self._slot_hashes[slot] is None:
+            return
+        full, partial = self._slot_hashes[slot]
+        if partial is None:
+            return
+        j = len(full)
+        if j >= self._max_blocks:
+            return
+        blk = int(self._block_tab[slot, j])
+        if (blk < 0 or partial in self._prefix_index
+                or blk in self._block_hash):
+            return
+        self._prefix_index[partial] = blk
+        self._block_hash[blk] = partial
 
     def pool_stats(self) -> dict:
         """KV-memory utilization: resident bytes actually backing live
@@ -335,13 +584,20 @@ class ContinuousScheduler:
         if kv.quantized:
             # int8 pool: add the per-(slot, head) fp32 k/v scale planes.
             per_token += kv.k.shape[0] * kv.k.shape[3] * 2 * 4
-        allocated = self.pool_blocks - len(self._free)
+        allocated = self._live_blocks
+        hit_rate = (self.prefix_hit_tokens / self.prompt_tokens_seen
+                    if self.prompt_tokens_seen else 0.0)
         return {
             "paged": True,
             "block_size": self.block_size,
             "pool_blocks": self.pool_blocks,
             "free_blocks": len(self._free),
+            # Live = referenced by a row's table. Retained = refcount-0
+            # prefix blocks kept for future hits; they are reclaimable on
+            # demand, so "resident" (what a right-sized pool must hold)
+            # counts only live blocks.
             "allocated_blocks": allocated,
+            "retained_prefix_blocks": len(self._lru),
             "peak_allocated_blocks": self._peak_blocks,
             "capacity_tokens": self.pool_blocks * self.block_size,
             "resident_kv_bytes": allocated * self.block_size * per_token,
@@ -353,11 +609,21 @@ class ContinuousScheduler:
             "reserved_kv_bytes":
                 self.max_batch * (self.max_ctx + _contig_headroom())
                 * per_token,
+            # -- cross-request prefix cache --
+            "prefix_cache": self.prefix_cache,
+            "prefix_hit_blocks": self.prefix_hit_blocks,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prompt_tokens": self.prompt_tokens_seen,
+            "prefix_hit_rate": hit_rate,
+            "cow_copies": self.cow_copies,
+            "prefix_evictions": self.prefix_evictions,
+            "cached_prefix_blocks": len(self._prefix_index),
+            "prefill_tokens_computed": self.prefill_tokens_computed,
         }
 
     def reset_pool_peak(self) -> None:
         if self.paged:
-            self._peak_blocks = self.pool_blocks - len(self._free)
+            self._peak_blocks = self._live_blocks
 
     # -- admission / retirement --------------------------------------------
 
@@ -367,31 +633,52 @@ class ContinuousScheduler:
             req.out_tokens = []
         req.t_done = self._now()
 
-    def _admit(self, req: Request, slot: int) -> Optional[Request]:
-        """Prefill `req` solo and scatter its state into batch row `slot`.
-        Returns the request if it finished on its very first token."""
+    def _admit(self, req: Request, slot: int, match=None) -> Optional[Request]:
+        """Prefill `req` — solo cold, or suffix-only on a prefix-cache hit
+        — and scatter its state into batch row `slot`. Returns the request
+        if it finished on its very first token."""
         n = len(req.prompt)
-        L = self._bucketed(n)
-        tokens = np.zeros((1, L), np.int32)
-        tokens[0, :n] = req.prompt  # right-pad; real length via `lengths`
-        solo, logits = self._prefill_fn(L)(
-            self.params,
-            {"tokens": jnp.asarray(tokens),
-             "lengths": jnp.asarray([n], jnp.int32)},
-        )
         if self.paged:
-            need = self._need_blocks(req)
-            self._avail -= need
-            self._reserved[slot] = need
-            for j in range(-(-n // self.block_size)):
-                self._alloc_block(slot, j)
-            # scatter_into_paged also writes this row's table device-side;
-            # _table_dirty stays set so rows freed earlier still sync.
-            self.cache = self._scatter_paged(
-                self.cache, solo, slot, jnp.asarray(self._block_tab[slot])
+            hits, resident, revive, reserve, hashes = (
+                match if match is not None else self._match_prefix(req)
             )
+            self.prompt_tokens_seen += n
+            self.prefix_hit_blocks += len(hits)
+            self.prefix_hit_tokens += resident
+            if self.prefix_cache:
+                self._slot_hashes[slot] = hashes
+            self._avail -= reserve
+            self._reserved[slot] = reserve
+            self._claim_hits(slot, hits)   # revives pay into _avail here
+            for j in range(-(-n // self.block_size)):
+                if self._block_tab[slot, j] < 0:
+                    self._alloc_block(slot, j)
+            self._touch_peak()
         else:
-            self.cache = self._scatter(self.cache, solo, slot)
+            resident = 0
+        if resident:
+            logits = self._prefill_suffix(req, slot, resident)
+        else:
+            L = self._bucketed(n)
+            if self.paged:
+                self.prefill_tokens_computed += L
+            tokens = np.zeros((1, L), np.int32)
+            tokens[0, :n] = req.prompt  # right-pad; real length via `lengths`
+            solo, logits = self._prefill_fn(L)(
+                self.params,
+                {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray([n], jnp.int32)},
+            )
+            if self.paged:
+                # scatter_into_paged also writes this row's table device-
+                # side; _table_dirty stays set so rows freed earlier sync.
+                self.cache = self._scatter_paged(
+                    self.cache, solo, slot, jnp.asarray(self._block_tab[slot])
+                )
+            else:
+                self.cache = self._scatter(self.cache, solo, slot)
+        if self.paged and self.prefix_cache:
+            self._register_full(slot)
         self._pos_host[slot] = n
 
         key = sampling.request_key(self.seed, req.rid)
@@ -417,6 +704,60 @@ class ContinuousScheduler:
             return req
         return None
 
+    def _suffix_fn(self, length: int):
+        if length not in self._suffix_cache:
+            self._suffix_cache[length] = jax.jit(self.model.prefill_suffix)
+        return self._suffix_cache[length]
+
+    def _prefill_suffix(self, req: Request, slot: int, resident: int):
+        """Run the suffix-only prefill for a prefix-cache hit: gather the
+        resident prefix K/V from the row's (already claimed) pool blocks,
+        prefill only the uncached tail, scatter the tail's K/V into the
+        row's fresh blocks. At least the last prompt token is always
+        prefilled — the first sampled token comes from its logits — but
+        positions already resident are never re-written, so a fully
+        cached prompt admits without moving any KV data."""
+        n = len(req.prompt)
+        start = min(resident, n - 1)
+        ls = n - start
+        Ls = self._bucketed(ls)
+        self.prefill_tokens_computed += Ls
+        tokens = np.zeros((1, Ls), np.int32)
+        tokens[0, :ls] = req.prompt[start:]
+        kv = self.cache.kv
+        # Clamp the per-layer pool gather to the blocks that actually
+        # cover the prefix (host-known bound, same trick as
+        # paged_gather(max_blocks=...)), bucketed so the compiled
+        # signature count stays bounded instead of always paying the
+        # full max_blocks table width.
+        gran = max(self.bucket // self.block_size, 1)
+        covering = -(-start // self.block_size)     # blocks holding [0, start)
+        nbp = min(self._max_blocks, max(gran, -(-covering // gran) * gran))
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "lengths": jnp.asarray([ls], jnp.int32),
+            "start": jnp.asarray(start, jnp.int32),
+            "pool_k": kv.k,
+            "pool_v": kv.v,
+            "prefix_blocks": jnp.asarray(self._block_tab[slot, :nbp]),
+        }
+        if kv.quantized:
+            batch["pool_k_scale"] = kv.k_scale
+            batch["pool_v_scale"] = kv.v_scale
+        solo, logits = self._suffix_fn(Ls)(self.params, batch)
+        if resident < n:
+            # Below a full-prompt hit only whole blocks are shared, so the
+            # suffix starts exactly at the block boundary `resident`.
+            self.cache = self._scatter_suffix(
+                self.cache, solo, slot, jnp.asarray(self._block_tab[slot]),
+                resident // self.block_size,
+            )
+        else:
+            self.cache = self._set_row(
+                self.cache, solo, slot, jnp.asarray(self._block_tab[slot])
+            )
+        return logits
+
     def _emit(self, req: Request, tok: int) -> None:
         self.tokens_emitted += 1
         if req.on_token is not None:
@@ -432,7 +773,9 @@ class ContinuousScheduler:
     # -- the decode loop ----------------------------------------------------
 
     def step(self) -> List[Request]:
-        """One scheduler step: admit waiting requests into free slots, run
+        """One scheduler step: admit waiting requests into free slots
+        (suffix-only prefill on a prefix-cache hit; queue FIFO when the
+        pool can't cover an admission's revive + reservation draw), run
         one batched decode step, sample, retire finished slots. Returns
         the requests that finished this step (including any rejected as
         oversized — those carry ``error`` and no tokens)."""
@@ -450,11 +793,14 @@ class ContinuousScheduler:
                     self._fail(head, reason)
                     finished.append(head)
                     continue
-                if self.paged and self._need_blocks(head) > self._avail:
+                match = self._match_prefix(head) if self.paged else None
+                if self.paged and match[2] + match[3] > self._avail:
+                    # revive + reserve is the admission's true capacity
+                    # draw (shared live blocks are free).
                     blocked = True  # pool full: queue (FIFO), don't crash
                     break
                 self.waiting.popleft()
-                done = self._admit(head, b)
+                done = self._admit(head, b, match)
                 if done is not None:
                     # Finished on its prefill token (max_new <= 1 /
                     # instant EOS) — the slot is free again, keep

@@ -1,0 +1,262 @@
+"""Cross-request prefix caching over the paged pool.
+
+Covers: the bit-identity contract (a prefix-hit request's greedy tokens
+equal a cold request's — solo, concurrent live sharing, mid-decode
+admission, bf16 and int8 pools, including a fully-cached prompt that
+admits without scattering any KV), and the refcounted allocator's edge
+cases (retirement of two rows sharing blocks never double-frees,
+copy-on-write when a row appends into a shared partial block, LRU
+eviction racing admission reservations, int8 scale-plane sharing,
+hit/CoW counters, and prefix_cache=False restoring exclusive
+ownership)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+SYS = np.arange(10) % 64                       # shared prefix, 10 tokens
+PROMPT_A = np.concatenate([SYS, [7, 9]])       # 12 tokens = 3 full blocks @4
+PROMPT_B = np.concatenate([SYS, [11, 3]])
+PROMPT_C = SYS                                 # partial last block @4
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def olmo_int8():
+    cfg = dataclasses.replace(get_reduced_config("olmo-1b"),
+                              kv_cache_quant=True)
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _drain(sched):
+    out = []
+    while sched.num_active or sched.num_waiting:
+        out.extend(sched.step())
+    return out
+
+
+def _cold(cfg, params, reqs):
+    done = ServingEngine(cfg, params, max_batch=2,
+                         bucket=16).generate_static(reqs)
+    return {r.rid: r.out_tokens for r in done}
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_ctx", 48)
+    kw.setdefault("bucket", 16)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_size", 4)
+    return ContinuousScheduler(cfg, params, **kw)
+
+
+def _assert_drained_invariants(sched):
+    """After every request retires: no live blocks, no dangling refcounts,
+    no duplicate free-list entries, full capacity available again."""
+    assert sched._live_blocks == 0
+    assert (sched._refcnt >= 0).all() and sched._refcnt[1:].sum() == 0
+    assert len(set(sched._free)) == len(sched._free)
+    assert len(sched._free) + len(sched._lru) == sched.pool_blocks
+    assert sched._avail == sched.pool_blocks
+    assert (sched._block_tab == -1).all()
+
+
+# --------------------------------------------------------------------------
+# Bit-identity: prefix hits must be invisible in the outputs
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fixture", ["olmo", "olmo_int8"])
+def test_prefix_hit_bit_identical(fixture, request):
+    """Warm admissions — live sharing between concurrent rows, a fully
+    cached resubmitted prompt, and a mid-decode join onto resident blocks
+    — all produce exactly the cold (static-engine) greedy tokens, on both
+    the bf16 and the int8 pool."""
+    cfg, params = request.getfixturevalue(fixture)
+    ref = _cold(cfg, params, [Request(0, PROMPT_A, max_new_tokens=8),
+                              Request(1, PROMPT_B, max_new_tokens=8)])
+
+    # Concurrent: request 1 shares request 0's live prefix blocks.
+    sched = _sched(cfg, params)
+    assert sched.prefix_cache
+    r0 = Request(0, PROMPT_A, max_new_tokens=8)
+    r1 = Request(1, PROMPT_B, max_new_tokens=8)
+    sched.run([r0, r1])
+    assert r0.out_tokens == ref[0]
+    assert r1.out_tokens == ref[1]
+    stats = sched.pool_stats()
+    assert stats["prefix_hit_blocks"] >= 2      # SYS = 2 full blocks
+    assert stats["prefix_hit_tokens"] >= 8
+
+    # Fully cached prompt: every position resident → admission scatters
+    # no KV (suffix prefill computes only the last token's logits).
+    r2 = Request(2, PROMPT_A, max_new_tokens=8)
+    sched.run([r2])
+    assert r2.out_tokens == ref[0]
+    assert sched.pool_stats()["prefix_hit_tokens"] >= 8 + len(PROMPT_A)
+
+    # Mid-decode join onto resident blocks.
+    mid = _sched(cfg, params)
+    first = Request(0, PROMPT_A, max_new_tokens=12)
+    mid.submit(first)
+    for _ in range(3):
+        mid.step()
+    joined = Request(1, PROMPT_B, max_new_tokens=8)
+    mid.submit(joined)
+    _drain(mid)
+    assert mid.pool_stats()["prefix_hit_blocks"] > 0
+    assert joined.out_tokens == ref[1]
+    assert first.out_tokens == _cold(
+        cfg, params, [Request(0, PROMPT_A, max_new_tokens=12)])[0]
+    _assert_drained_invariants(mid)
+
+
+def test_prefix_cache_off_keeps_exclusive_ownership(olmo):
+    """prefix_cache=False restores the PR 3/4 behaviour: no sharing, no
+    retention — every block returns to the free list on retirement."""
+    cfg, params = olmo
+    ref = _cold(cfg, params, [Request(0, PROMPT_A, max_new_tokens=6)])
+    sched = _sched(cfg, params, prefix_cache=False)
+    r0 = Request(0, PROMPT_A, max_new_tokens=6)
+    r1 = Request(1, PROMPT_A, max_new_tokens=6)
+    sched.run([r0, r1])
+    assert r0.out_tokens == ref[0] and r1.out_tokens == ref[0]
+    stats = sched.pool_stats()
+    assert not stats["prefix_cache"]
+    assert stats["prefix_hit_blocks"] == 0
+    assert len(sched._free) == sched.pool_blocks
+    assert len(sched._lru) == 0
+
+
+def test_prefix_cache_requires_paged_support(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="prefix caching"):
+        ContinuousScheduler(cfg, params, max_batch=1, max_ctx=32,
+                            bucket=16, paged=False, prefix_cache=True)
+
+
+# --------------------------------------------------------------------------
+# Allocator refcount edge cases
+# --------------------------------------------------------------------------
+
+
+def test_shared_retirement_never_double_frees(olmo):
+    """Two rows sharing prefix blocks retire one after the other: the
+    shared blocks must be decref'd once per row — not freed twice — and
+    the pool must come back to exactly full capacity."""
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    r0 = Request(0, PROMPT_A, max_new_tokens=10)   # retires second
+    r1 = Request(1, PROMPT_B, max_new_tokens=3)    # retires first
+    sched.submit(r0)
+    sched.step()
+    sched.submit(r1)
+    _drain(sched)
+    assert sched.pool_stats()["prefix_hit_blocks"] >= 2
+    _assert_drained_invariants(sched)
+
+
+def test_cow_on_shared_partial_block(olmo):
+    """A retained partial prompt block revived by two rows: each row's
+    first decode append must copy-on-write (the pristine cached block
+    survives), and outputs stay bit-identical to cold."""
+    cfg, params = olmo
+    ref = _cold(cfg, params, [Request(0, PROMPT_C, max_new_tokens=6)])
+    sched = _sched(cfg, params)
+    a = Request(0, PROMPT_C, max_new_tokens=6)
+    sched.run([a])                     # registers the partial block
+    b = Request(1, PROMPT_C, max_new_tokens=6)
+    c = Request(2, PROMPT_C, max_new_tokens=6)
+    sched.submit(b)
+    sched.submit(c)
+    _drain(sched)
+    stats = sched.pool_stats()
+    assert stats["cow_copies"] >= 1
+    assert a.out_tokens == ref[0]
+    assert b.out_tokens == ref[0]
+    assert c.out_tokens == ref[0]
+    _assert_drained_invariants(sched)
+    # The pristine partial block is still cached: a fourth identical
+    # request hits the full prompt again.
+    hits = stats["prefix_hit_tokens"]
+    d = Request(3, PROMPT_C, max_new_tokens=6)
+    sched.run([d])
+    assert d.out_tokens == ref[0]
+    assert sched.pool_stats()["prefix_hit_tokens"] >= hits + len(PROMPT_C)
+
+
+def test_eviction_races_reservation(olmo):
+    """A pool mostly occupied by retained prefix blocks must evict them —
+    never a live row's blocks — when a later admission's allocations need
+    the space; evicted hashes leave the index, accounting stays exact."""
+    cfg, params = olmo
+    ref_a = _cold(cfg, params, [Request(0, PROMPT_A, max_new_tokens=6)])
+    ref_b = _cold(cfg, params, [Request(1, PROMPT_B, max_new_tokens=13)])
+    # Pool of 6. A (12-token prompt = 3 full blocks, max_new 6) uses 5
+    # blocks, retires, retains its 3 registered prompt blocks. B shares
+    # the 2 SYS blocks but needs ceil((12+13-1)/4) = 6 blocks total: its
+    # boundary allocations drain the free list and must evict A's
+    # remaining retained block mid-decode.
+    sched = _sched(cfg, params, pool_blocks=6, max_ctx=32)
+    a = Request(0, PROMPT_A, max_new_tokens=6)
+    sched.run([a])
+    assert sched.pool_stats()["retained_prefix_blocks"] >= 3
+    b = Request(1, PROMPT_B, max_new_tokens=13)
+    sched.run([b])
+    stats = sched.pool_stats()
+    assert stats["prefix_evictions"] >= 1
+    assert stats["prefix_hit_blocks"] >= 2
+    assert not b.failed and b.out_tokens == ref_b[1]
+    assert a.out_tokens == ref_a[0]
+    assert len(sched._prefix_index) == len(sched._block_hash)
+    _assert_drained_invariants(sched)
+
+
+def test_int8_scale_plane_sharing(olmo_int8):
+    """int8 pool: shared prefix blocks share their fp32 scale planes too —
+    hits occur and warm outputs match the cold int8 static engine."""
+    cfg, params = olmo_int8
+    ref = _cold(cfg, params, [Request(0, PROMPT_C, max_new_tokens=6)])
+    sched = _sched(cfg, params)
+    assert sched.cache.kv.quantized
+    a = Request(0, PROMPT_C, max_new_tokens=6)
+    b = Request(1, PROMPT_C, max_new_tokens=6)
+    sched.run([a])
+    sched.run([b])
+    stats = sched.pool_stats()
+    assert stats["prefix_hit_blocks"] >= 3      # 2 full + partial
+    assert a.out_tokens == ref[0]
+    assert b.out_tokens == ref[0]
+    _assert_drained_invariants(sched)
+
+
+def test_pool_stats_counters(olmo):
+    """pool_stats() reports the prefix-cache counters the serve driver and
+    CI smoke rely on."""
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    sched.run([Request(0, PROMPT_A, max_new_tokens=4)])
+    sched.run([Request(1, PROMPT_A, max_new_tokens=4)])
+    stats = sched.pool_stats()
+    for key in ("prefix_cache", "prefix_hit_blocks", "prefix_hit_tokens",
+                "prefix_hit_rate", "cow_copies", "prefix_evictions",
+                "retained_prefix_blocks", "cached_prefix_blocks",
+                "prompt_tokens"):
+        assert key in stats, key
+    assert stats["prefix_cache"] is True
+    assert stats["prefix_hit_tokens"] >= len(PROMPT_A)
+    assert 0.0 < stats["prefix_hit_rate"] <= 1.0
+    assert stats["prompt_tokens"] == 2 * len(PROMPT_A)
