@@ -23,6 +23,14 @@ arrival, wall clock) and writes BENCH_serving.json at the repo root.
 Continuous batching should win mean latency at every rate — that gap is
 the point of the subsystem.
 
+A chunked-prefill section sweeps prompt length × arrival rate with a
+short victim request decoding throughout: each cell serves the same
+stream with Sarathi-style chunked prefill on and off and reports the
+victim's inter-token latency (p50/p99 — the p99 captures the admission
+stall) plus the long requests' mean TTFT. Outputs must be bit-identical
+between the two modes (asserted), and chunking must win p99 ITL at the
+longest prompt (asserted — that bound is the point of the feature).
+
 Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
 """
 from __future__ import annotations
@@ -140,6 +148,111 @@ def _pool_overcommit(cfg, params, quick: bool) -> dict:
     }
 
 
+def _chunked_sweep(cfg, params, quick: bool) -> list:
+    """Prompt length × arrival rate, chunked prefill on vs off.
+
+    One short "victim" request decodes throughout while long prompts are
+    admitted into the remaining slots. Solo prefill runs the whole
+    prompt in the admission step — the victim's inter-token latency
+    spikes by the full prefill cost (the p99). Chunked prefill bounds
+    every step to --prefill-budget prompt tokens. Both modes serve the
+    identical stream; outputs are asserted bit-identical per cell.
+
+    The sweep runs both modes under the XLA ``reference`` backend: on
+    CPU the default interpret backend executes pallas grids in Python,
+    so its per-call overhead (a correctness-simulator artifact) would
+    swamp the per-step work bound being measured. Under one compiled
+    backend for both modes, each cell isolates exactly what this
+    subsystem changes — how much prefill work shares a step with
+    decode."""
+    from repro.kernels import get_registry
+    from repro.serving import ContinuousScheduler, Request
+
+    # Prompts long enough that the solo prefill's token-dependent cost
+    # dominates per-call dispatch overhead on the reduced CPU model —
+    # below ~128 tokens both modes' steps are all fixed cost and the
+    # cells measure noise.
+    budget, bs, bucket = 16, 8, 64
+    plens = [384] if quick else [96, 256, 512]
+    rates = [0.0] if quick else [0.0, 20.0]
+    n_long = 2 if quick else 3
+    victim_new = 24 if quick else 48
+    max_ctx = max(-(-p // bucket) * bucket for p in plens) + bucket
+
+    def stream(rng_seed, plen, rate):
+        rng = np.random.default_rng(rng_seed)
+        reqs = [Request(0, rng.integers(0, cfg.vocab, 8),
+                        max_new_tokens=victim_new, arrival_time=0.0)]
+        t = 0.01
+        for i in range(n_long):
+            reqs.append(Request(i + 1, rng.integers(0, cfg.vocab, plen),
+                                max_new_tokens=6, arrival_time=t))
+            t += 1.0 / rate if rate else 0.01
+        return reqs
+
+    # One scheduler per mode, reused across cells so jit caches warm up
+    # once. Prefix caching is off: every admission must be a cold
+    # prefill, or the second pass over a stream would skip the very work
+    # being measured. Built (= traced) inside the reference-backend
+    # scope so every compiled step uses it.
+    with get_registry().use("reference"):
+        scheds = {}
+        for chunked in (True, False):
+            scheds[chunked] = ContinuousScheduler(
+                cfg, params, max_batch=3, max_ctx=max_ctx, bucket=bucket,
+                paged=True, block_size=bs, prefix_cache=False,
+                chunked_prefill=chunked, prefill_budget=budget)
+        for chunked, sched in scheds.items():  # compile every cell's shapes
+            for plen in plens:
+                sched.run(stream(3, plen, 0.0))
+
+        rows = _sweep_cells(scheds, stream, plens, rates)
+    longest = [c for c in rows if c["prompt_len"] == max(plens)]
+    assert all(c["p99_itl_speedup"] > 1.0 for c in longest), \
+        "chunked prefill did not improve p99 ITL at the longest prompt"
+    return rows
+
+
+def _sweep_cells(scheds, stream, plens, rates):
+    rows = []
+    for plen in plens:
+        for rate in rates:
+            cell = {"prompt_len": plen,
+                    "arrival_rate_per_s": rate if rate else "all-at-once"}
+            outs = {}
+            for chunked, sched in scheds.items():
+                stamps = {}
+                sched.on_token = (lambda req, tok:
+                                  stamps.setdefault(req.rid, [])
+                                  .append(time.perf_counter()))
+                done = sched.run(stream(7, plen, rate))
+                sched.on_token = None
+                outs[chunked] = {r.rid: r.out_tokens for r in done}
+                itl = np.diff(stamps[0]) * 1e3
+                ttft = [r.t_first - r.arrival_time
+                        for r in done if r.rid != 0]
+                mode = "chunked" if chunked else "solo"
+                cell[mode] = {
+                    "victim_itl_p50_ms": round(float(np.percentile(itl, 50)), 2),
+                    "victim_itl_p99_ms": round(float(np.percentile(itl, 99)), 2),
+                    "ttft_mean_ms": round(float(np.mean(ttft)) * 1e3, 1),
+                }
+                if chunked:
+                    cell["prefill_chunks_run"] = sched.prefill_chunks_run
+                emit(f"serving/chunked_{chunked}/plen_{plen}_rate_"
+                     f"{rate or 'inf'}",
+                     cell[mode]["victim_itl_p99_ms"] * 1e3,
+                     f"itl_p50_ms={cell[mode]['victim_itl_p50_ms']} "
+                     f"ttft_ms={cell[mode]['ttft_mean_ms']}")
+            assert outs[True] == outs[False], \
+                f"chunked outputs diverged from solo at plen={plen}"
+            cell["p99_itl_speedup"] = round(
+                cell["solo"]["victim_itl_p99_ms"]
+                / max(cell["chunked"]["victim_itl_p99_ms"], 1e-9), 2)
+            rows.append(cell)
+    return rows
+
+
 def run(quick: bool = False) -> dict:
     from repro.configs import get_reduced_config
     from repro.models import build_model
@@ -198,6 +311,9 @@ def run(quick: bool = False) -> dict:
     assert pool["bit_identical_to_contiguous"], \
         "paged outputs diverged from contiguous"
 
+    chunk_rows = _chunked_sweep(cfg, params, quick)
+    results["chunked_p99_itl_speedup"] = chunk_rows[-1]["p99_itl_speedup"]
+
     if quick:
         # CI smoke: don't overwrite the committed full-sweep artifact.
         return results
@@ -210,6 +326,13 @@ def run(quick: bool = False) -> dict:
         "config": {"max_batch": max_batch, "requests": n},
         "rows": rows,
         "pool_overcommit": pool,
+        "chunked_prefill_sweep": {
+            "note": ("victim inter-token latency while long prompts are "
+                     "admitted, chunked (budget=16) vs solo prefill; "
+                     "p99 captures the admission stall; outputs "
+                     "bit-identical between modes"),
+            "rows": chunk_rows,
+        },
     }, indent=2) + "\n")
     return results
 

@@ -26,6 +26,7 @@ from repro.kernels import bitplane_matmul as _bpm
 from repro.kernels import fused_matmul as _fused
 from repro.kernels import pack_quant as _pq
 from repro.kernels import paged_attention as _paged
+from repro.kernels import paged_prefill as _paged_pf
 from repro.kernels import ref as _ref
 from repro.kernels import wkv6 as _wkv6
 from repro.kernels.registry import KernelBackend, get_registry, use_backend  # noqa: F401
@@ -266,6 +267,57 @@ def paged_attention(
     return _paged.paged_attention(
         q, pool_k, pool_v, block_table, q_pos, k_scale, v_scale,
         softcap=softcap, bh=bh, interpret=be.interpret,
+    )
+
+
+def paged_prefill(
+    q: jax.Array,            # (1, Lc, NQ, H) — one row's chunk queries
+    k_new: jax.Array,        # (1, Lc, NKV, H) — chunk K/V (unquantized)
+    v_new: jax.Array,
+    pool_k: jax.Array,       # (num_blocks, block_size, NKV, H)
+    pool_v: jax.Array,
+    blocks: jax.Array,       # (mb,) int32 row block table, -1 = unallocated
+    start: jax.Array,        # () int32 chunk token 0's absolute position
+    length: jax.Array,       # () int32 real chunk length (<= Lc)
+    *,
+    k_scale: Optional[jax.Array] = None,  # (num_blocks, block_size, NKV, 1)
+    v_scale: Optional[jax.Array] = None,
+    softcap: float = 0.0,
+    blocks_plan: Optional[Tuple[int, int, int]] = None,
+    backend=None,
+):
+    """Fused paged chunked-prefill: attend a prompt chunk against
+    [pool-resident prefix ++ chunk] causally AND write the chunk's K/V
+    into its destination pool blocks, in one kernel.
+
+    The decode kernel's scalar-prefetch/block-table trick applied to the
+    prefill grid: resident prefix blocks stream through the table index
+    map (no per-layer HBM gather of the prefix), and destination blocks
+    are written back through input/output-aliased pool refs from the
+    kernel epilogue (no post-prefill scatter round trip). int8 pools
+    quantize on write in-kernel with the exact `quantize_kv` math, so the
+    pool bytes are bit-identical to the scatter path's.
+
+    Returns (attn (1, Lc, NQ, H) in q's dtype, pool_k, pool_v, k_scale,
+    v_scale) — scales are None passthroughs for a bf16 pool. The
+    reference backend runs the scatter-then-gather-attend oracle
+    (:func:`repro.kernels.ref.paged_prefill_ref`), the semantic spec the
+    kernel is tested against."""
+    be = get_registry().resolve(backend)
+    if be.is_reference:
+        return _ref.paged_prefill_ref(
+            q, k_new, v_new, pool_k, pool_v, blocks, start, length,
+            k_scale=k_scale, v_scale=v_scale, softcap=softcap,
+        )
+    bs, n_kv = pool_k.shape[1], pool_k.shape[2]
+    bh, _, _ = blocks_plan or get_registry().paged_prefill_plan(
+        n_kv, bs, pool_k.shape[3], be
+    )
+    if bh <= 0 or n_kv % bh:
+        bh = n_kv  # plans must divide the KV heads; fall back to all
+    return _paged_pf.paged_prefill_attention(
+        q, k_new, v_new, pool_k, pool_v, blocks, start, length,
+        k_scale, v_scale, softcap=softcap, bh=bh, interpret=be.interpret,
     )
 
 

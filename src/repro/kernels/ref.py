@@ -149,6 +149,67 @@ def paged_attention_ref(
     return out.reshape(B, 1, NQ, H).astype(q.dtype)
 
 
+def paged_prefill_ref(
+    q: jax.Array,            # (1, Lc, NQ, H)
+    k_new: jax.Array,        # (1, Lc, NKV, H) — chunk K/V, unquantized
+    v_new: jax.Array,
+    pool_k: jax.Array,       # (num_blocks, block_size, NKV, H)
+    pool_v: jax.Array,
+    blocks: jax.Array,       # (mb,) int32 row block table, -1 = unallocated
+    start: jax.Array,        # () int32 chunk token 0's absolute position
+    length: jax.Array,       # () int32 real chunk length (<= Lc)
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    softcap: float = 0.0,
+):
+    """Scatter-then-gather-attend oracle for the chunked-prefill kernel.
+
+    Writes the chunk into the pool with `paged_chunk_write` (the exact
+    quantize-on-write math the kernel inlines), then gathers the row's
+    blocks in table order and runs a full fp32 masked softmax — chunk
+    query i sees allocated positions <= start + i, padded queries
+    (i >= length) see nothing and output zeros. Attending *through the
+    pool* is the point: an int8 pool's chunk keys come back as
+    dequantize(quantize(k)), the `_kv_attn_view` contract."""
+    from repro.models import kv_cache as _kvc
+
+    _, Lc, NQ, H = q.shape
+    bs, NKV = pool_k.shape[1], pool_k.shape[2]
+    G = NQ // NKV
+    mb = blocks.shape[0]
+    pool_k, pool_v, k_scale, v_scale = _kvc.paged_chunk_write(
+        pool_k, pool_v, blocks, k_new, v_new, start, length, bs,
+        k_scale, v_scale)
+    tbl = jnp.maximum(blocks, 0)
+    k_rows = pool_k[tbl].reshape(mb * bs, NKV, H)
+    v_rows = pool_v[tbl].reshape(mb * bs, NKV, H)
+    virt = jnp.arange(mb * bs, dtype=jnp.int32)
+    alloc = jnp.repeat(blocks >= 0, bs)
+    kpos = jnp.where(alloc, virt, -1)
+
+    qr = q.reshape(Lc, NKV, G, H)
+    s = jnp.einsum("qngh,snh->nqgs", qr.astype(jnp.float32),
+                   k_rows.astype(jnp.float32))
+    if k_scale is not None:
+        ks = k_scale[tbl].reshape(mb * bs, NKV)
+        s = s * ks.T[:, None, None, :]
+    s = s * (H**-0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(Lc, dtype=jnp.int32)
+    qpos = jnp.where(qi < length, jnp.asarray(start, jnp.int32) + qi, -1)
+    valid = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+    s = jnp.where(valid[None, :, None, :], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[None, :, None, :], p, 0.0)
+    if v_scale is not None:
+        vs = v_scale[tbl].reshape(mb * bs, NKV)
+        p = p * vs.T[:, None, None, :]
+    out = jnp.einsum("nqgs,snh->qngh", p, v_rows.astype(jnp.float32))
+    attn = out.reshape(1, Lc, NQ, H).astype(q.dtype)
+    return attn, pool_k, pool_v, k_scale, v_scale
+
+
 def flash_attention_ref(
     q: jax.Array,  # (BH, Tq, D)
     k: jax.Array,  # (BH, Tk, D)

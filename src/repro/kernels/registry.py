@@ -164,16 +164,40 @@ def _paged_attention_candidates(heur: Blocks, m, n, k, be) -> list:
     return [(d, bs, hd) for d in range(1, m + 1) if m % d == 0]
 
 
+def pick_paged_prefill_blocks(
+    m: int,   # NKV — number of KV heads
+    n: int,   # block_size — pool tokens per block
+    k: int,   # H — head dim
+    *,
+    m_align: int = 8,
+    n_align: int = 128,
+    k_align: int = 128,
+    vmem_budget: int = PAGED_ATTN_VMEM_BUDGET,
+) -> Blocks:
+    """Plan (bh, block_size, H) for the chunked-prefill kernel.
+
+    Same single knob as the decode kernel — KV heads streamed per grid
+    step — but a prefill step additionally holds the whole chunk's
+    queries, fresh K/V rows and the (Lc-deep) softmax scratch in VMEM,
+    so the head budget is charged double relative to decode."""
+    bh = m
+    while bh > 1 and 16 * n * bh * k > vmem_budget:
+        bh = max(d for d in range(1, bh) if m % d == 0)
+    return bh, n, k
+
+
 _PLANNERS: Dict[str, Callable[..., Blocks]] = {
     "bitplane_matmul": pick_matmul_blocks,
     "fused_matmul": pick_fused_blocks,
     "paged_attention": pick_paged_attention_blocks,
+    "paged_prefill": pick_paged_prefill_blocks,
 }
 
 # Per-op autotune candidate generators; ops without an entry fall back to
 # the generic matmul-style (bm, bk) factor sweep.
 _CANDIDATES: Dict[str, Callable[..., list]] = {
     "paged_attention": _paged_attention_candidates,
+    "paged_prefill": _paged_attention_candidates,
 }
 
 
@@ -289,6 +313,11 @@ class KernelRegistry:
     def paged_attention_plan(self, n_kv, block_size, head_dim,
                              backend=None) -> Blocks:
         return self.plan("paged_attention", n_kv, block_size, head_dim,
+                         backend)
+
+    def paged_prefill_plan(self, n_kv, block_size, head_dim,
+                           backend=None) -> Blocks:
+        return self.plan("paged_prefill", n_kv, block_size, head_dim,
                          backend)
 
     def record_plan(

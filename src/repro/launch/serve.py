@@ -35,6 +35,14 @@ suffix, bit-identical to a cold prefill. --no-prefix-cache disables it
 (--prefix-cache forces it on, erroring if unsupported); the hit rate is
 reported after a continuous run.
 
+Chunked prefill (Sarathi-style) is also on by default on the paged pool:
+admission enqueues a chunk *plan* and the scheduler spends at most
+--prefill-budget prompt tokens of prefill per step through the fused
+paged chunked-prefill kernel, interleaved with the live batch's decode
+steps — a long prompt never stalls decoding for more than one budgeted
+chunk. --no-chunked-prefill reverts to solo whole-prompt prefill at
+admission. Chunk/stall counters are reported after a continuous run.
+
 --plans FILE persists the kernel registry's block-plan cache (autotune
 winners, e.g. the paged-attention bh knob) across process restarts:
 loaded before serving if the file exists, written back on exit.
@@ -81,6 +89,13 @@ def main():
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false",
                     help="disable cross-request prefix caching")
+    ap.add_argument("--prefill-budget", type=int, default=32,
+                    help="chunked prefill: max prompt tokens prefilled "
+                         "per scheduler step (the decode-stall bound)")
+    ap.add_argument("--no-chunked-prefill", dest="chunked_prefill",
+                    action="store_false", default=None,
+                    help="disable Sarathi-style chunked prefill (solo "
+                         "whole-prompt prefill at admission instead)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common N-token system prompt to every "
                          "synthetic request (exercises the prefix cache)")
@@ -147,7 +162,9 @@ def main():
                            paged=False if args.no_paged else None,
                            block_size=args.block_size,
                            pool_blocks=args.pool_blocks,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           chunked_prefill=args.chunked_prefill,
+                           prefill_budget=args.prefill_budget)
 
     def make_requests():
         # Self-contained stream: every call reproduces the exact same
@@ -207,6 +224,13 @@ def main():
                       f"{stats['cow_copies']} CoW copies, "
                       f"{stats['prefix_evictions']} evictions, "
                       f"{stats['retained_prefix_blocks']} retained)")
+            if stats.get("chunked_prefill"):
+                print(f"  chunked prefill: {stats['prefill_chunks_run']} "
+                      f"chunks (budget={stats['prefill_budget']}), "
+                      f"{stats['decode_steps_stalled']} decode steps "
+                      f"shared a step with a chunk, "
+                      f"{stats['prefill_tokens_per_step']:.1f} prefill "
+                      f"tok/step")
         elif stats:
             print(f"  contiguous KV cache: "
                   f"{stats['resident_kv_bytes']/1e6:.2f} MB resident "

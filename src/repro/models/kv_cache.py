@@ -293,6 +293,32 @@ def paged_cache_write(pool_k, pool_v, block_table, k_new, v_new, pos,
     return pool_k, pool_v, k_scale, v_scale
 
 
+def paged_chunk_write(pool_k, pool_v, blocks, k_new, v_new, start, length,
+                      block_size: int, k_scale=None, v_scale=None):
+    """Write one row's `length`-token chunk (1, Lc, NKV, H) into a single
+    layer's pool at absolute positions [start, start + length), routed
+    through the row's own block table `blocks` (mb,). Padded chunk slots
+    (t >= length) and positions past the table are routed to the trash
+    block 0, so a fixed-shape Lc never touches blocks a later chunk owns.
+    int8 pools quantize on write exactly like `paged_cache_write`.
+    Returns (pool_k, pool_v, k_scale, v_scale)."""
+    Lc = k_new.shape[1]
+    pos = jnp.asarray(start, jnp.int32) + jnp.arange(Lc, dtype=jnp.int32)
+    valid = jnp.arange(Lc) < length
+    idx = jnp.clip(pos // block_size, 0, blocks.shape[0] - 1)
+    blk = jnp.where(valid, jnp.maximum(blocks[idx], 0), 0)
+    off = pos % block_size
+    k_new, v_new = k_new[0], v_new[0]
+    if k_scale is not None:
+        k_new, ks = quantize_kv(k_new)
+        v_new, vs = quantize_kv(v_new)
+        k_scale = k_scale.at[blk, off].set(ks)
+        v_scale = v_scale.at[blk, off].set(vs)
+    pool_k = pool_k.at[blk, off].set(k_new.astype(pool_k.dtype))
+    pool_v = pool_v.at[blk, off].set(v_new.astype(pool_v.dtype))
+    return pool_k, pool_v, k_scale, v_scale
+
+
 def paged_gather(pool_k, pool_v, block_table, k_scale=None, v_scale=None,
                  max_blocks: Optional[int] = None):
     """Gather each row's blocks in table order from a single layer's pool:

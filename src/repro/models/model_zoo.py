@@ -79,6 +79,16 @@ def build_model(cfg: ModelConfig) -> SimpleNamespace:
         ns.prefill_suffix = (
             lambda params, batch: mod.prefill_suffix(params, cfg, batch)
         )
+    if (hasattr(mod, "prefill_chunk") and not cfg.attn_window
+            and not cfg.moe_experts and cfg.frontend == "none"):
+        # Chunked prefill straight into the paged pool (fused
+        # attend + epilogue-write kernel) — same eligibility gate as
+        # prefill_suffix: the bit-identity contract needs full attention,
+        # per-row-reproducible routing, and token inputs.
+        ns.prefill_chunk = (
+            lambda params, cache, batch:
+            mod.prefill_chunk(params, cfg, cache, batch)
+        )
     return ns
 
 

@@ -539,6 +539,94 @@ def prefill_suffix(params, cfg: ModelConfig, batch):
     return DecodeCache(pos=total, kv=kvc), logits
 
 
+def prefill_chunk(params, cfg: ModelConfig, cache: DecodeCache, batch):
+    """Prefill one token *chunk* of a single row's prompt directly against
+    the shared paged pool — the decode-path model method behind
+    Sarathi-style chunked prefill. Each layer runs the fused
+    ``ops.paged_prefill`` kernel: the chunk attends causally over
+    ``[pool-resident prefix ++ chunk]`` with prefix blocks streamed
+    through the row's block table, and the chunk's K/V lands in its
+    destination pool blocks from the kernel epilogue (quantize-on-write
+    for int8 pools). No contiguous prefix copy is ever materialized and
+    no post-prefill scatter runs — admission becomes a sequence of these
+    calls, interleaved with decode steps by the scheduler.
+
+    ``batch`` keys:
+      tokens (1, Lc)   right-padded chunk token ids
+      lengths (1,)     real chunk length (<= Lc)
+      start ()         absolute position of the chunk's first token; the
+                       positions [0, start) are already pool-resident —
+                       either a shared warm prefix or this row's earlier
+                       chunks (byte-identical by the quantize-on-write
+                       contract, so the kernel can't tell them apart)
+      slot ()          the row's batch slot in `cache`
+      blocks (nbp,)    the row's pool blocks covering positions
+                       [0, start + lengths[0]) in virtual-block order;
+                       -1 entries are dead (trash-block remapped)
+
+    Returns ``(cache, logits (1, 1, V))`` — the pool planes updated in
+    place, ``cache.pos``/``kv.length`` advanced to ``start + lengths[0]``
+    at ``slot``, and logits for the chunk's last real token (only the
+    final chunk's logits are meaningful: they sample the first output
+    token). Chunk boundaries never change the math — attention depends
+    only on absolute positions and pool bytes — so any chunk split of a
+    prompt is bit-identical to the whole-prompt prefill."""
+    if cfg.attn_window:
+        raise ValueError("chunked prefill requires a full-attention "
+                         f"paged cache (attn_window={cfg.attn_window})")
+    from repro.kernels import ops
+
+    tokens = batch["tokens"]
+    B, Lc = tokens.shape
+    lengths = jnp.asarray(batch["lengths"], jnp.int32)
+    start = jnp.asarray(batch["start"], jnp.int32)
+    slot = jnp.asarray(batch["slot"], jnp.int32)
+    blocks = jnp.asarray(batch["blocks"], jnp.int32)
+    kv: PagedKVCache = cache.kv
+    quant = kv.quantized
+    L = cfg.num_layers
+    length = lengths[0]
+
+    spos = start + jnp.arange(Lc, dtype=jnp.int32)
+    positions = jnp.broadcast_to(spos[None], (B, Lc))
+    x = cm.embed_lookup(params["embed"], tokens, scale=_embed_scale(cfg))
+    x = constrain(x, "batch", None, None)
+
+    def body(xc, layer_in):
+        block_p, pk, pv, ks, vs = layer_in
+        h = cm.apply_norm(xc, block_p["ln1"], cfg.norm)
+        q, k, v = _attention_qkv(block_p, cfg, h, positions)
+        attn, pk, pv, ks_new, vs_new = ops.paged_prefill(
+            q, k, v, pk, pv, blocks, start, length,
+            k_scale=ks if quant else None,
+            v_scale=vs if quant else None,
+            softcap=cfg.attn_logit_softcap,
+        )
+        xn, _ = _block_post_attn_seq(block_p, cfg, xc, attn)
+        if quant:
+            ks, vs = ks_new, vs_new
+        return xn, (pk, pv, ks, vs)
+
+    ks_in = kv.k_scale if quant else jnp.zeros((L, 0))
+    vs_in = kv.v_scale if quant else jnp.zeros((L, 0))
+    x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+        body, x, (params["blocks"], kv.k, kv.v, ks_in, vs_in)
+    )
+    hidden = cm.apply_norm(cm.last_token_slice(x, lengths),
+                           params["final_norm"], cfg.norm)
+    logits = compute_logits(params, cfg, hidden)
+    total = start + length
+    new_cache = DecodeCache(
+        pos=cache.pos.at[slot].set(total),
+        kv=PagedKVCache(k=k_new, v=v_new, block_table=kv.block_table,
+                        length=kv.length.at[slot].set(total),
+                        k_scale=ks_new if quant else None,
+                        v_scale=vs_new if quant else None,
+                        block_size=kv.block_size),
+    )
+    return new_cache, logits
+
+
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array,
                 paged_fused: bool = True,
                 gather_blocks: Optional[int] = None):

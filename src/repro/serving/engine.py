@@ -61,6 +61,8 @@ class ServingEngine:
         block_size: int = 16,
         pool_blocks: Optional[int] = None,
         prefix_cache: Optional[bool] = None,
+        chunked_prefill: Optional[bool] = None,
+        prefill_budget: int = 32,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -78,11 +80,17 @@ class ServingEngine:
         self.block_size = block_size
         self.pool_blocks = pool_blocks
         self.prefix_cache = prefix_cache    # None = auto (on if paged-able)
+        self.chunked_prefill = chunked_prefill  # None = auto (on if eligible)
+        self.prefill_budget = prefill_budget
         self._sched: Optional[ContinuousScheduler] = None
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
 
     def _prefill_fn(self, length: int):
+        # Key by *bucketed* length — callers pad to the bucket anyway, so
+        # a raw-length key would compile one executable per distinct
+        # long-tail prompt length.
+        length = self._bucketed(length)
         if length not in self._prefill_cache:
             self._prefill_cache[length] = jax.jit(self.model.prefill)
         return self._prefill_cache[length]
@@ -109,6 +117,8 @@ class ServingEngine:
                 on_token=self.on_token, paged=self.paged,
                 block_size=self.block_size, pool_blocks=self.pool_blocks,
                 prefix_cache=self.prefix_cache,
+                chunked_prefill=self.chunked_prefill,
+                prefill_budget=self.prefill_budget,
             )
         self._sched.on_token = self.on_token  # pick up late reassignment
         return self._sched

@@ -152,6 +152,8 @@ class ContinuousScheduler:
         block_size: int = 16,
         pool_blocks: Optional[int] = None,
         prefix_cache: Optional[bool] = None,
+        chunked_prefill: Optional[bool] = None,
+        prefill_budget: int = 32,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -206,6 +208,38 @@ class ContinuousScheduler:
                 "non-MoE full-attention transformer)"
             )
         self.prefix_cache = prefix_cache
+
+        # Sarathi-style chunked prefill rides on the paged pool and on the
+        # fused chunk kernel's model method (`prefill_chunk`, same
+        # eligibility gate as prefill_suffix). Admission then enqueues a
+        # chunk *plan* instead of prefilling solo: each step spends at
+        # most `prefill_budget` prompt tokens of chunked prefill alongside
+        # the decode step, so live slots stall at most one step per
+        # budget's worth of admission prefill.
+        can_chunk = (
+            paged
+            and getattr(self.model, "prefill_chunk", None) is not None
+        )
+        if chunked_prefill is None:
+            chunked_prefill = can_chunk
+        elif chunked_prefill and not can_chunk:
+            raise ValueError(
+                f"{cfg.name}: chunked prefill requires the paged KV cache "
+                "and an arch with the fused chunk-prefill path "
+                "(token-input, non-MoE full-attention transformer)"
+            )
+        if prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1")
+        self.chunked_prefill = chunked_prefill
+        self.prefill_budget = prefill_budget
+        if chunked_prefill:
+            self._chunk = jax.jit(self.model.prefill_chunk,
+                                  donate_argnums=(1,))
+        self._chunk_plans: Dict[int, dict] = {}   # slot → in-flight plan
+        self._chunk_queue: Deque[int] = collections.deque()  # FIFO slots
+        self.prefill_chunks_run = 0
+        self.decode_steps_stalled = 0
+        self.prefill_chunk_tokens = 0
 
         B = max_batch
         if paged:
@@ -300,6 +334,10 @@ class ContinuousScheduler:
         return max(self.bucket, -(-n // self.bucket) * self.bucket)
 
     def _prefill_fn(self, length: int):
+        # Key by *bucketed* length: callers pad to the bucket anyway, so
+        # keying on the raw length would compile one identical executable
+        # per distinct long-tail prompt length.
+        length = self._bucketed(length)
         if length not in self._prefill_cache:
             self._prefill_cache[length] = jax.jit(self.model.prefill)
         return self._prefill_cache[length]
@@ -403,8 +441,8 @@ class ContinuousScheduler:
         gets a private copy (charged to its reservation like any other
         allocation)."""
         for b, req in enumerate(self._slots):
-            if req is None:
-                continue
+            if req is None or b in self._chunk_plans:
+                continue  # mid-chunk-prefill rows don't decode-append yet
             j = int(self._pos_host[b]) // self.block_size
             if j >= self._max_blocks:
                 continue
@@ -424,10 +462,20 @@ class ContinuousScheduler:
 
     def _sync_table(self) -> None:
         if self._table_dirty:
+            tab = self._block_tab
+            if self._chunk_plans:
+                # A mid-chunk-prefill row is invisible to the decode step:
+                # its DEVICE table row stays all -1 (decode's cache write
+                # routes to the trash block, its attention sees no keys,
+                # its logits are discarded). The chunk calls receive the
+                # real blocks explicitly, so the host table is untouched.
+                tab = tab.copy()
+                for b in self._chunk_plans:
+                    tab[b, :] = -1
             self.cache = dataclasses.replace(
                 self.cache,
                 kv=dataclasses.replace(
-                    self.cache.kv, block_table=jnp.asarray(self._block_tab)
+                    self.cache.kv, block_table=jnp.asarray(tab)
                 ),
             )
             self._table_dirty = False
@@ -530,11 +578,16 @@ class ContinuousScheduler:
         if hits:
             self._table_dirty = True
 
-    def _register_full(self, slot: int) -> None:
-        """Index row `slot`'s full prompt blocks at admission (their
-        content is final the moment the prompt KV is scattered — appends
-        only ever land past the prompt)."""
+    def _register_full(self, slot: int, limit: Optional[int] = None) -> None:
+        """Index row `slot`'s full prompt blocks once their content is
+        final (appends only ever land past the prompt). Solo/suffix
+        admissions register everything at admission; chunked plans pass
+        ``limit`` to register progressively — only blocks the landed
+        chunks fully cover, since the straddled tail block is still
+        rewritten by the next chunk."""
         full, _ = self._slot_hashes[slot]
+        if limit is not None:
+            full = full[:limit]
         for j, h in enumerate(full):
             blk = int(self._block_tab[slot, j])
             if blk < 0 or h in self._prefix_index or blk in self._block_hash:
@@ -619,6 +672,15 @@ class ContinuousScheduler:
             "prefix_evictions": self.prefix_evictions,
             "cached_prefix_blocks": len(self._prefix_index),
             "prefill_tokens_computed": self.prefill_tokens_computed,
+            # -- Sarathi-style chunked prefill / decode interleave --
+            "chunked_prefill": self.chunked_prefill,
+            "prefill_budget": self.prefill_budget,
+            "prefill_chunks_run": self.prefill_chunks_run,
+            "decode_steps_stalled": self.decode_steps_stalled,
+            # Prompt tokens prefilled per decode step — the interleave
+            # ratio (0 when admission never overlapped live decodes).
+            "prefill_tokens_per_step":
+                self.prefill_chunk_tokens / max(self.steps_run, 1),
         }
 
     def reset_pool_peak(self) -> None:
@@ -680,7 +742,13 @@ class ContinuousScheduler:
         if self.paged and self.prefix_cache:
             self._register_full(slot)
         self._pos_host[slot] = n
+        return self._first_token(req, slot, logits)
 
+    def _first_token(self, req: Request, slot: int, logits) -> Optional[Request]:
+        """Sample the request's first output token from its prefill logits
+        and arm the slot's decode state — the shared admission tail of the
+        solo, suffix and chunked prefill paths. Returns the request if it
+        finished on that very first token (slot released)."""
         key = sampling.request_key(self.seed, req.rid)
         tok = int(np.asarray(sampling.sample_tokens(
             logits[:, -1, :],
@@ -705,6 +773,7 @@ class ContinuousScheduler:
         return None
 
     def _suffix_fn(self, length: int):
+        length = self._bucketed(length)  # see _prefill_fn
         if length not in self._suffix_cache:
             self._suffix_cache[length] = jax.jit(self.model.prefill_suffix)
         return self._suffix_cache[length]
@@ -758,6 +827,90 @@ class ContinuousScheduler:
             )
         return logits
 
+    def _admit_chunked(self, req: Request, slot: int, match) -> None:
+        """Claim row `slot` for `req` and enqueue a chunk *plan* instead of
+        prefilling solo: the same allocator work as `_admit` (reservation,
+        prefix-hit claiming, prompt-block allocation) happens up front, but
+        the prompt KV is computed `prefill_budget` tokens at a time by
+        `_run_chunk`, one call per scheduler step, interleaved with the
+        live batch's decode steps. Until the last chunk lands, the slot is
+        masked out of decoding (device table row all -1, see `_sync_table`)
+        and out of sampling, and its prompt blocks stay unregistered in
+        the prefix index (their bytes don't exist yet)."""
+        n = len(req.prompt)
+        hits, resident, revive, reserve, hashes = match
+        self.prompt_tokens_seen += n
+        self.prefix_hit_blocks += len(hits)
+        self.prefix_hit_tokens += resident
+        if self.prefix_cache:
+            self._slot_hashes[slot] = hashes
+        self._avail -= reserve
+        self._reserved[slot] = reserve
+        self._claim_hits(slot, hits)   # revives pay into _avail here
+        for j in range(-(-n // self.block_size)):
+            if self._block_tab[slot, j] < 0:
+                self._alloc_block(slot, j)
+        self._touch_peak()
+        self._pos_host[slot] = 0
+        self._cur[slot, 0] = 0         # dummy decode input while prefilling
+        self._slots[slot] = req
+        # Chunks start at the warm-prefix boundary: `resident` below a
+        # full-prompt hit is whole blocks only, so chunk writes begin at a
+        # block boundary and never touch a block shared with other rows.
+        self._chunk_plans[slot] = {"req": req, "next": resident, "n": n}
+        self._chunk_queue.append(slot)
+        self._table_dirty = True       # mask this row on the next sync
+
+    def _run_chunk(self, slot: int) -> Optional[Request]:
+        """Run one `prefill_budget`-token chunk of row `slot`'s plan
+        through the fused paged-prefill kernel: the chunk attends over
+        [pool-resident prefix ++ chunk] and its K/V lands in the row's own
+        pool blocks from the kernel epilogue — no scatter round trip, no
+        per-layer prefix gather. On the final chunk the prompt is fully
+        resident: the row's full blocks are registered in the prefix
+        index, the device table is unmasked, and the first output token is
+        sampled from the chunk's last-token logits. Returns the request
+        if it finished on that first token."""
+        plan = self._chunk_plans[slot]
+        req, n, start = plan["req"], plan["n"], plan["next"]
+        Lc = self.prefill_budget
+        t = min(Lc, n - start)
+        tokens = np.zeros((1, Lc), np.int32)
+        tokens[0, :t] = req.prompt[start:start + t]
+        # Clamp the kernel's block-table operand to the blocks covering
+        # [0, start + t), bucketed like _prefill_suffix's gather clamp so
+        # the compiled signature count stays bounded: one executable per
+        # (budget, bucketed covering-blocks) pair.
+        gran = max(self.bucket // self.block_size, 1)
+        covering = -(-(start + t) // self.block_size)
+        nbp = min(self._max_blocks, max(gran, -(-covering // gran) * gran))
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "lengths": jnp.asarray([t], jnp.int32),
+            "start": jnp.asarray(start, jnp.int32),
+            "slot": jnp.asarray(slot, jnp.int32),
+            "blocks": jnp.asarray(self._block_tab[slot, :nbp]),
+        }
+        self.cache, logits = self._chunk(self.params, self.cache, batch)
+        self.prefill_chunks_run += 1
+        self.prefill_chunk_tokens += t
+        self.prefill_tokens_computed += Lc
+        plan["next"] = start + t
+        if self.prefix_cache:
+            # Blocks this chunk fully covered are final — index them now
+            # so a same-prefix request admitted on a later step shares
+            # them instead of re-prefilling.
+            self._register_full(slot, limit=plan["next"] // self.block_size)
+        if plan["next"] < n:
+            return None
+        # Prompt fully resident: the slot graduates to decoding.
+        del self._chunk_plans[slot]
+        self._pos_host[slot] = n
+        if self.prefix_cache:
+            self._register_full(slot)
+        self._table_dirty = True       # unmask the row for the decode step
+        return self._first_token(req, slot, logits)
+
     def _emit(self, req: Request, tok: int) -> None:
         self.tokens_emitted += 1
         if req.on_token is not None:
@@ -774,15 +927,20 @@ class ContinuousScheduler:
 
     def step(self) -> List[Request]:
         """One scheduler step: admit waiting requests into free slots
-        (suffix-only prefill on a prefix-cache hit; queue FIFO when the
-        pool can't cover an admission's revive + reservation draw), run
-        one batched decode step, sample, retire finished slots. Returns
-        the requests that finished this step (including any rejected as
-        oversized — those carry ``error`` and no tokens)."""
+        (chunked-prefill plan by default; suffix-only prefill on a
+        full-prompt prefix hit; queue FIFO when the pool can't cover an
+        admission's revive + reservation draw), spend at most one
+        ``prefill_budget``-token chunk of in-flight admission prefill,
+        run one batched decode step, sample, retire finished slots. Live
+        slots always decode — a chunk costs them one kernel call of extra
+        latency per step, never a skipped step. Returns the requests that
+        finished this step (including any rejected as oversized — those
+        carry ``error`` and no tokens)."""
         finished: List[Request] = []
         blocked = False
+        chunk_admitted = False
         for b in range(self.max_batch):
-            if self._slots[b] is not None or blocked:
+            if self._slots[b] is not None or blocked or chunk_admitted:
                 continue
             while self.waiting:
                 head = self.waiting[0]
@@ -800,6 +958,20 @@ class ContinuousScheduler:
                     blocked = True  # pool full: queue (FIFO), don't crash
                     break
                 self.waiting.popleft()
+                if self.chunked_prefill and match[1] < len(head.prompt):
+                    # Uncached prompt tail → chunk plan. (A full-prompt
+                    # prefix hit moves no KV and stays on the suffix
+                    # path: its one-token "prefill" reads shared blocks
+                    # the chunk kernel must never write.) One chunked
+                    # admission per step: a same-prefix follower admitted
+                    # in this same step would match against an index this
+                    # plan hasn't written to yet and cold-prefill blocks
+                    # it could share — admitted next step, it hits the
+                    # blocks the chunks have landed (and registered) by
+                    # then.
+                    self._admit_chunked(head, b, match)
+                    chunk_admitted = True
+                    break
                 done = self._admit(head, b, match)
                 if done is not None:
                     # Finished on its prefill token (max_new <= 1 /
@@ -808,9 +980,25 @@ class ContinuousScheduler:
                     finished.append(done)
                     continue
                 break
-        if self.num_active == 0:
-            return finished
 
+        # Spend one budgeted chunk of admission prefill (FIFO across
+        # plans) alongside this step's decode.
+        chunk_ran = False
+        if self._chunk_queue:
+            slot = self._chunk_queue[0]
+            chunk_ran = True
+            done = self._run_chunk(slot)
+            if slot not in self._chunk_plans:
+                self._chunk_queue.popleft()
+                if done is not None:
+                    finished.append(done)
+
+        if not any(r is not None and b not in self._chunk_plans
+                   for b, r in enumerate(self._slots)):
+            return finished  # nothing decodes: only chunk plans in flight
+
+        if chunk_ran:
+            self.decode_steps_stalled += 1
         if self.paged:
             self._alloc_boundary_blocks()
             self._sync_table()
@@ -823,8 +1011,8 @@ class ContinuousScheduler:
         self._steps += 1
         self.steps_run += 1
         for b, req in enumerate(self._slots):
-            if req is None:
-                continue
+            if req is None or b in self._chunk_plans:
+                continue  # mid-chunk-prefill slots don't sample yet
             self._pos_host[b] += 1
             tok = int(toks[b])
             req.out_tokens.append(tok)
