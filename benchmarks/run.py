@@ -20,6 +20,7 @@ from benchmarks import (
     quant_error,
     roofline_table,
     serving_bench,
+    spec_bench,
     table3_intralayer,
 )
 
@@ -35,6 +36,7 @@ MODULES = {
     "roofline": roofline_table,
     "serving": serving_bench,
     "prefix": prefix_bench,
+    "spec": spec_bench,
 }
 
 

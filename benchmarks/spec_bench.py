@@ -1,0 +1,174 @@
+"""Self-speculative decoding benchmark: accepted tokens per step and the
+modeled per-token weight traffic, swept over draft depth and precision.
+
+Serves a fixed greedy workload through the continuous scheduler at
+k ∈ {0, 2, 4} draft tokens per step with w2a8 and w4a8 truncated-plane
+drafts, measuring the real acceptance rate, and models the HBM weight
+traffic per emitted token. The traffic story is M4BRAM's: the draft is a
+*plane subset* of the one resident packed buffer, so a draft step reads
+only ``draft_bits / target_bits`` of the weight bytes (w4 of w8 = 1/2,
+w2 of w8 = 1/4) and the verify pass reads the full buffer once for all
+k+1 positions. A speculation round therefore costs
+
+    k · frac · W  (drafts)  +  W  (verify)  +  W  (trailing decode)
+
+weight bytes and emits ``accepted + 2`` tokens (verify's bonus token plus
+the trailing decode's), against W per token for plain decode — so bytes
+per token drop whenever the measured acceptance beats the draft
+overhead. Wall time in CPU interpret/jit mode tracks call counts, not
+TPU bytes; the modeled bytes column is the TPU-relevant number, exactly
+like decode_bench's traffic model.
+
+Run:  PYTHONPATH=src python -m benchmarks.spec_bench [--quick]
+Writes BENCH_spec.json at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+
+def _packed_weight_bytes(params, draft_bits=None):
+    """Total packed GEMM weight bytes in `params`; with `draft_bits`, the
+    bytes a truncated-plane draft actually streams (top planes only)."""
+    import jax
+
+    from repro.core.quantized_linear import PackedWeight
+    from repro.serving.speculative import PLANE_BITS, plane_offset
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda l: isinstance(l, PackedWeight)):
+        if not isinstance(leaf, PackedWeight):
+            continue
+        nbytes = int(leaf.packed.nbytes)
+        if leaf.packed8 is not None:
+            nbytes += int(leaf.packed8.nbytes)
+        if draft_bits is not None:
+            lo = plane_offset(leaf.bits, draft_bits)
+            nbytes = nbytes * (leaf.bits - PLANE_BITS * lo) // leaf.bits
+        total += nbytes
+    return total
+
+
+def _serve(cfg, params, quant, k, draft, prompts, max_new):
+    import numpy as np
+
+    from repro.serving import ContinuousScheduler, Request
+
+    sched = ContinuousScheduler(
+        cfg, params, max_batch=2, max_ctx=64, quant=quant, bucket=16,
+        paged=True, block_size=4, chunked_prefill=True, prefill_budget=8,
+        speculate=k, draft_policy=draft)
+    reqs = [Request(rid=i, prompt=np.asarray(p), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    done = sched.run(reqs)
+    return done, sched
+
+
+def run(quick: bool = False) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_reduced_config
+    from repro.core.quant import QuantConfig
+    from repro.core.quantized_linear import quantize_params_for_serving
+
+    from repro.models import build_model
+
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    quant = QuantConfig(w_bits=8, a_bits=8)
+
+    qp = quantize_params_for_serving(params, quant, min_size=1024)
+    W = _packed_weight_bytes(qp)
+    frac = {d: _packed_weight_bytes(qp, b) / W
+            for d, b in (("w2a8", 2), ("w4a8", 4))}
+
+    # Degenerate prompts keep even the 2-bit draft partially on-script at
+    # random init; real checkpoints accept far more.
+    prompts = [np.zeros(8, np.int64), (np.arange(8) % 64).astype(np.int64)]
+    max_new = 12 if quick else 24
+    ks = [0, 2] if quick else [0, 2, 4]
+    drafts = ["w4a8"] if quick else ["w2a8", "w4a8"]
+
+    base_done, base = _serve(cfg, params, quant, 0, "w4a8", prompts, max_new)
+    base_tokens = sum(len(r.out_tokens) for r in base_done)
+    base_steps = base.steps_run
+    ref_streams = {r.rid: r.out_tokens for r in base_done}
+
+    rows = []
+    results = {}
+    for draft in drafts:
+        for k in ks:
+            if k == 0:
+                done, sched = base_done, base
+            else:
+                done, sched = _serve(cfg, params, quant, k, draft,
+                                     prompts, max_new)
+            st = sched.pool_stats()
+            tokens = sum(len(r.out_tokens) for r in done)
+            # greedy speculation is a scheduling change only
+            assert {r.rid: r.out_tokens for r in done} == ref_streams
+            steps = sched.steps_run
+            rounds = st["spec_rounds"]
+            acc = st["spec_acceptance_rate"]
+            # Weight bytes: every decode step streams W once (batched —
+            # shared across slots), every draft step streams the plane
+            # fraction once (also batched), and every verify call streams
+            # W (one chunk call per speculating slot per round).
+            step_bytes = (steps * W + rounds * k * frac[draft] * W
+                          + sched.spec_verify_calls * W)
+            row = {
+                "draft": draft, "k": k,
+                "draft_weight_frac": round(frac[draft], 3),
+                "tokens": tokens, "steps": steps, "spec_rounds": rounds,
+                "accepted_tokens_per_step":
+                    round(st["spec_accepted_tokens"] / max(steps, 1), 3),
+                "tokens_per_step": round(tokens / max(steps, 1), 3),
+                "acceptance_rate": round(acc, 3),
+                "weight_bytes_per_token_model":
+                    round(step_bytes / max(tokens, 1)),
+                "vs_k0_bytes_per_token": round(
+                    (step_bytes / max(tokens, 1))
+                    / (base_steps * W / max(base_tokens, 1)), 3),
+            }
+            rows.append(row)
+            results[f"{draft}_k{k}_tokens_per_step"] = row["tokens_per_step"]
+            emit(f"spec/{draft}/k{k}", 0.0,
+                 f"acc={acc:.2f} tok/step={row['tokens_per_step']} "
+                 f"bytes/tok={row['weight_bytes_per_token_model']}")
+
+    if quick:
+        return results
+    bench_path = Path(__file__).resolve().parents[1] / "BENCH_spec.json"
+    bench_path.write_text(json.dumps({
+        "note": ("self-speculative decoding from the resident bit-plane "
+                 "weights on the reduced olmo-1b at random init (greedy, "
+                 "bit-identity asserted against k=0 in-run). "
+                 "weight_bytes_per_token_model is MODELED, not measured: "
+                 "drafts stream only the kept top planes of the one "
+                 "packed buffer (w4 of w8 = 1/2 the bytes, w2 = 1/4), "
+                 "verify streams it fully once per round. Acceptance at "
+                 "random init is a floor — trained checkpoints accept "
+                 "far more, and bytes/token falls as acceptance rises "
+                 "while the k=0 row always pays full-precision reads"),
+        "config": {"arch": "olmo-1b (reduced)", "quant": "w8a8",
+                   "packed_weight_bytes": W,
+                   "draft_weight_frac": {d: round(f, 3)
+                                         for d, f in frac.items()},
+                   "max_new": max_new, "prompts": len(prompts)},
+        "rows": rows,
+    }, indent=2) + "\n")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer cells, no JSON artifact (CI smoke)")
+    args = ap.parse_args()
+    run(quick=args.quick)

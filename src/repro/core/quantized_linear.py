@@ -44,6 +44,11 @@ class PackedWeight:
     a_bits / act_signed : the activation precision this layer was packed
              for — the leaf carries its own per-layer PrecisionPolicy
              decision, so serve-time matmuls need no global QuantConfig.
+    plane_lo : contract only planes [plane_lo:] of the packed codes — a
+             *view-level* precision drop (w8 storage served as w4/w2 by
+             plane truncation, the self-speculative draft path). Aux
+             data, not a leaf: truncating a policy never copies weight
+             bytes, it only re-traces the matmul.
     """
 
     packed: jax.Array
@@ -54,18 +59,21 @@ class PackedWeight:
     packed8: Optional[jax.Array] = None
     a_bits: int = 8
     act_signed: bool = True
+    plane_lo: int = 0
 
     def tree_flatten(self):
         leaves = (self.packed, self.scale, self.packed8)
-        aux = (self.bits, self.k, self.n8, self.a_bits, self.act_signed)
+        aux = (self.bits, self.k, self.n8, self.a_bits, self.act_signed,
+               self.plane_lo)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         packed, scale, packed8 = leaves
-        bits, k, n8, a_bits, act_signed = aux
+        bits, k, n8, a_bits, act_signed, plane_lo = aux
         return cls(packed=packed, scale=scale, bits=bits, k=k, n8=n8,
-                   packed8=packed8, a_bits=a_bits, act_signed=act_signed)
+                   packed8=packed8, a_bits=a_bits, act_signed=act_signed,
+                   plane_lo=plane_lo)
 
     @property
     def shape(self):
@@ -100,17 +108,28 @@ def pack_weight(w: jax.Array, cfg: QuantConfig) -> PackedWeight:
     return PackedWeight(pk, s, cfg.w_bits, k, 0, None, ab, asg)
 
 
-def unpack_weight(pw: PackedWeight) -> jax.Array:
-    """Dense int32 codes (K, N) for the reference path / tests."""
+def unpack_weight(pw: PackedWeight, *, apply_plane_lo: bool = True) -> jax.Array:
+    """Dense int32 codes (K, N) for the reference path / tests.
+
+    A ``plane_lo`` view is applied by arithmetic shift (≡ keep planes
+    [lo:], see kernels/bitplane_matmul.py); pass ``apply_plane_lo=False``
+    to get the raw resident codes when the downstream kernel performs the
+    truncation itself (``w_plane_lo=``).
+    """
     ql = bitplane.unpack_weights(pw.packed, pw.bits, axis=0)
     if pw.n8:
         q8 = pw.packed8.astype(jnp.int32)
-        return jnp.concatenate([q8, ql], axis=1)
+        ql = jnp.concatenate([q8, ql], axis=1)
+    if apply_plane_lo and pw.plane_lo:
+        ql = ql >> (2 * pw.plane_lo)
     return ql
 
 
 def dequantize_weight(pw: PackedWeight, dtype=jnp.float32) -> jax.Array:
-    return (unpack_weight(pw).astype(jnp.float32) * pw.scale).astype(dtype)
+    # Truncated codes lose 2·plane_lo low bits, so one code unit is worth
+    # 4^plane_lo original LSBs — the scale regains that factor.
+    scale = pw.scale * (1 << (2 * pw.plane_lo)) if pw.plane_lo else pw.scale
+    return (unpack_weight(pw).astype(jnp.float32) * scale).astype(dtype)
 
 
 def qmatmul(
@@ -164,13 +183,24 @@ def _serve_matmul(
     if use_kernel:
         from repro.kernels import ops as kops
 
-        wq = unpack_weight(pw)
+        # Hand the kernel the *resident* codes and let it truncate in
+        # VMEM (w_plane_lo): HBM only ever sees the one packed buffer,
+        # whichever precision tier this call contracts at.
+        wq = unpack_weight(pw, apply_plane_lo=False)
         acc, xscale = kops.fused_quantize_matmul(
-            x2.astype(jnp.float32), wq, a_bits=a_bits, act_signed=act_signed
+            x2.astype(jnp.float32), wq, a_bits=a_bits, act_signed=act_signed,
+            w_plane_lo=pw.plane_lo,
         )  # per-row (per-token) scale
-        y = acc.astype(jnp.float32) * xscale * pw.scale
+        ws = pw.scale * (1 << (2 * pw.plane_lo)) if pw.plane_lo else pw.scale
+        y = acc.astype(jnp.float32) * xscale * ws
         return y.reshape(*lead, -1).astype(x.dtype)
-    xq = fake_quant(x2, a_bits, act_signed)
+    # Per-token (row) activation scales, matching the kernel path's K-loop
+    # prologue. Per-tensor scaling would make a token's quantized
+    # activation depend on every other token in the call — decode batches,
+    # prefill chunks, and speculative verify windows would each see
+    # different bytes for the same token, breaking the serving stack's
+    # batch-composition-independence contract.
+    xq = fake_quant(x2, a_bits, act_signed, axis=0)
     w = dequantize_weight(pw, dtype=xq.dtype)
     y = xq @ w
     return y.reshape(*lead, -1).astype(x.dtype)

@@ -49,6 +49,7 @@ def _bitplane_matmul_kernel(
     a_bits: int,
     act_signed: bool,
     plane_bits: int,
+    w_plane_lo: int,
 ):
     k_idx = pl.program_id(2)
 
@@ -58,6 +59,23 @@ def _bitplane_matmul_kernel(
 
     x = x_ref[...].astype(jnp.int32)
     w = w_ref[...].astype(jnp.int32)
+
+    if w_plane_lo:
+        # Plane-truncated contraction: use only the top planes of the
+        # (conceptually little-endian plane-decomposed) weight codes.  A
+        # signed code w stores as offset-binary u = w + 2^(b-1), whose
+        # plane p holds bits [p·pb, (p+1)·pb).  Dropping planes [0, lo)
+        # and re-weighting plane p at 2^((p-lo)·pb) is exactly
+        # floor(u / 4^lo) - 2^(b-1)/4^lo; since the sign offset 2^(b-1)
+        # divides by 4^lo whenever 2·lo < b (pb = 2), that equals the
+        # arithmetic shift w >> (lo·pb) — the sign plane stays the top
+        # plane and the truncated code is itself a valid signed
+        # (b - lo·pb)-bit code.  Crucially the shift happens BEFORE the
+        # activation-offset colsum correction below: the correction term
+        # offset·colsum(W) must be computed over the *truncated* weight,
+        # otherwise the dropped low planes of W would leak back in
+        # through the correction.
+        w = w >> (w_plane_lo * plane_bits)
 
     offset = (1 << (a_bits - 1)) if act_signed else 0
     u = x + offset  # offset-binary: planes are unsigned
@@ -85,7 +103,8 @@ def _bitplane_matmul_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("a_bits", "act_signed", "plane_bits", "bm", "bn", "bk", "interpret"),
+    static_argnames=("a_bits", "act_signed", "plane_bits", "w_plane_lo",
+                     "bm", "bn", "bk", "interpret"),
 )
 def bitplane_matmul(
     x_codes: jax.Array,
@@ -94,6 +113,7 @@ def bitplane_matmul(
     a_bits: int = 8,
     act_signed: bool = True,
     plane_bits: int = 2,
+    w_plane_lo: int = 0,
     bm: int = 128,
     bn: int = 128,
     bk: int = 256,
@@ -103,7 +123,15 @@ def bitplane_matmul(
 
     Shapes need not be block-aligned; inputs are zero-padded (zero codes
     contribute nothing — including to the offset correction, since colsum
-    of a zero column block is zero).
+    of a zero column block is zero; likewise a zero code is shift-invariant
+    so padding is safe under ``w_plane_lo`` truncation).
+
+    ``w_plane_lo`` contracts only the top planes of the weight codes:
+    plane ``lo`` becomes the new least-significant plane, realized as an
+    arithmetic shift of the signed codes (see the kernel for why that is
+    exactly "keep planes [lo:]"). The caller re-scales the dequantized
+    output by ``(1 << (plane_bits * w_plane_lo))`` to keep the weight
+    scale meaning "value of one unit of the *original* LSB".
     """
     if x_codes.ndim != 2 or w_codes.ndim != 2:
         raise ValueError("bitplane_matmul expects 2-D operands")
@@ -129,6 +157,7 @@ def bitplane_matmul(
         a_bits=a_bits,
         act_signed=act_signed,
         plane_bits=plane_bits,
+        w_plane_lo=w_plane_lo,
     )
     out = pl.pallas_call(
         kernel,

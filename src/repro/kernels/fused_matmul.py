@@ -50,6 +50,7 @@ def _fused_kernel(
     a_bits: int,
     act_signed: bool,
     plane_bits: int,
+    w_plane_lo: int,
     bk: int,
 ):
     kk = pl.program_id(2)
@@ -77,6 +78,14 @@ def _fused_kernel(
     n_planes = -(-a_bits // plane_bits)
     mask = (1 << plane_bits) - 1
     w = w_ref[...].astype(jnp.int32)
+    if w_plane_lo:
+        # Top-planes-only weight view: arithmetic shift ≡ drop planes
+        # [0, lo) of the offset-binary decomposition (the sign offset
+        # 2^(b-1) divides by 4^lo for 2·lo < b), so the sign plane stays
+        # the top plane. Must happen before the colsum correction — the
+        # offset term has to see the truncated weight, not the full one.
+        # See _bitplane_matmul_kernel for the full derivation.
+        w = w >> (w_plane_lo * plane_bits)
 
     acc = jnp.zeros(o_ref.shape, jnp.int32)
     for p in range(n_planes):  # static unroll: one MXU pass per plane
@@ -99,8 +108,8 @@ def _fused_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("a_bits", "act_signed", "plane_bits", "bm", "bn", "bk",
-                     "interpret"),
+    static_argnames=("a_bits", "act_signed", "plane_bits", "w_plane_lo",
+                     "bm", "bn", "bk", "interpret"),
 )
 def fused_quantize_matmul(
     x: jax.Array,
@@ -109,6 +118,7 @@ def fused_quantize_matmul(
     a_bits: int = 8,
     act_signed: bool = True,
     plane_bits: int = 2,
+    w_plane_lo: int = 0,
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
@@ -120,7 +130,9 @@ def fused_quantize_matmul(
     against `w_codes`, plus the per-row activation scales; the caller
     dequantizes as ``acc * scales * w_scale``. Shapes need not be
     block-aligned (zero padding contributes nothing — including to the row
-    absmax and to the signed-offset correction).
+    absmax and to the signed-offset correction). ``w_plane_lo`` contracts
+    only the top weight planes (see bitplane_matmul); the caller folds the
+    ``1 << (plane_bits * w_plane_lo)`` factor into the weight scale.
     """
     if x.ndim != 2 or w_codes.ndim != 2:
         raise ValueError("fused_quantize_matmul expects 2-D operands")
@@ -145,6 +157,7 @@ def fused_quantize_matmul(
         a_bits=a_bits,
         act_signed=act_signed,
         plane_bits=plane_bits,
+        w_plane_lo=w_plane_lo,
         bk=bk_,
     )
     acc, scales = pl.pallas_call(

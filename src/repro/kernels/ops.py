@@ -66,13 +66,21 @@ def bitplane_matmul(
     a_bits: int = 8,
     act_signed: bool = True,
     plane_bits: int = 2,
+    w_plane_lo: int = 0,
     blocks: Optional[Tuple[int, int, int]] = None,
     backend=None,
 ) -> jax.Array:
-    """Exact int matmul of activation codes × weight codes via bit planes."""
+    """Exact int matmul of activation codes × weight codes via bit planes.
+
+    ``w_plane_lo`` contracts only the top weight planes (the self-
+    speculative draft path): plane ``lo`` becomes the LSB plane and the
+    caller re-scales dequantization by ``4**w_plane_lo``.
+    """
     be = get_registry().resolve(backend)
     if be.is_reference:
-        return _ref.bitplane_matmul_ref(x_codes, w_codes, a_bits, act_signed)
+        return _ref.bitplane_matmul_ref(x_codes, w_codes, a_bits, act_signed,
+                                        w_plane_lo=w_plane_lo,
+                                        plane_bits=plane_bits)
     m, k = x_codes.shape
     n = w_codes.shape[1]
     bm, bn, bk = blocks or get_registry().matmul_plan(m, n, k, be)
@@ -82,6 +90,7 @@ def bitplane_matmul(
         a_bits=a_bits,
         act_signed=act_signed,
         plane_bits=plane_bits,
+        w_plane_lo=w_plane_lo,
         bm=bm,
         bn=bn,
         bk=bk,
@@ -105,6 +114,7 @@ def fused_quantize_matmul(
     a_bits: int = 8,
     act_signed: bool = True,
     plane_bits: int = 2,
+    w_plane_lo: int = 0,
     blocks: Optional[Tuple[int, int, int]] = None,
     backend=None,
 ):
@@ -113,12 +123,15 @@ def fused_quantize_matmul(
     One kernel: per-row quantization happens in the matmul's K-loop prologue
     with the fp32 rows resident in VMEM — no intermediate int8 activation
     tensor in HBM. Bit-identical to ``quantize_rows → bitplane_matmul``.
+    ``w_plane_lo`` contracts only the top weight planes (draft-policy path).
     """
     be = get_registry().resolve(backend)
     if be.is_reference:
         q, s = _ref.quantize_pack_ref(x.astype(jnp.float32), a_bits,
                                       signed=act_signed)
-        return _ref.bitplane_matmul_ref(q, w_codes, a_bits, act_signed), s
+        return _ref.bitplane_matmul_ref(q, w_codes, a_bits, act_signed,
+                                        w_plane_lo=w_plane_lo,
+                                        plane_bits=plane_bits), s
     m, k = x.shape
     n = w_codes.shape[1]
     bm, bn, bk = blocks or get_registry().fused_matmul_plan(m, n, k, be)
@@ -128,6 +141,7 @@ def fused_quantize_matmul(
         a_bits=a_bits,
         act_signed=act_signed,
         plane_bits=plane_bits,
+        w_plane_lo=w_plane_lo,
         bm=bm,
         bn=bn,
         bk=bk,
@@ -143,6 +157,7 @@ def packed_matmul(
     w_bits: int,
     a_bits: int = 8,
     act_signed: bool = True,
+    w_plane_lo: int = 0,
     backend=None,
 ) -> jax.Array:
     """float x (M, K) × packed sub-byte weights ((K·bits/8), N) → float (M, N).
@@ -150,14 +165,19 @@ def packed_matmul(
     The end-to-end M4BRAM serving path: unpack weights (VMEM-side layout
     op), then the *fused* quantize→bit-plane kernel (activations quantized
     in the matmul prologue), then dequantize with per-token × per-channel
-    scales.
+    scales. ``w_plane_lo`` runs the plane-truncated draft contraction on
+    the same packed buffer; the dropped low planes shrink the code range
+    by 4^lo, so the weight scale regains that factor here.
     """
     wq = bitplane.unpack_weights(packed, w_bits, axis=0)
     acc, xs = fused_quantize_matmul(
         x.astype(jnp.float32), wq, a_bits=a_bits, act_signed=act_signed,
-        backend=backend,
+        w_plane_lo=w_plane_lo, backend=backend,
     )
-    return (acc.astype(jnp.float32) * xs * scale.reshape(1, -1)).astype(x.dtype)
+    ws = scale.reshape(1, -1)
+    if w_plane_lo:
+        ws = ws * (1 << (2 * w_plane_lo))
+    return (acc.astype(jnp.float32) * xs * ws).astype(x.dtype)
 
 
 def mixed_group_matmul(

@@ -19,17 +19,28 @@ def bitplane_matmul_ref(
     w_codes: jax.Array,
     a_bits: int,
     act_signed: bool = True,
+    w_plane_lo: int = 0,
+    plane_bits: int = 2,
 ) -> jax.Array:
     """(M, K) int codes × (K, N) int codes → (M, N) int32, exact.
 
     Unsigned codes may arrive as wrapped int8 storage (255 → -1); mask to
     the a_bits range so the semantics match the kernels' offset-binary
     reconstruction mod 2^a_bits.
+
+    ``w_plane_lo`` truncates the weight to its top planes before the
+    contraction: the arithmetic shift is exactly "keep planes [lo:]" of
+    the little-endian offset-binary decomposition, because the sign
+    offset 2^(b-1) is divisible by 4^lo whenever 2·lo < b (see
+    bitplane_matmul's kernel for the derivation).
     """
     x = x_codes.astype(jnp.int32)
     if not act_signed:
         x = x & ((1 << a_bits) - 1)
-    return (x @ w_codes.astype(jnp.int32)).astype(jnp.int32)
+    w = w_codes.astype(jnp.int32)
+    if w_plane_lo:
+        w = w >> (w_plane_lo * plane_bits)
+    return (x @ w).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "signed"))

@@ -43,6 +43,17 @@ steps — a long prompt never stalls decoding for more than one budgeted
 chunk. --no-chunked-prefill reverts to solo whole-prompt prefill at
 admission. Chunk/stall counters are reported after a continuous run.
 
+Self-speculative decoding: --speculate K drafts K tokens per scheduler
+step from a truncated-plane view of the resident packed weights (the
+draft reads only the top bit-planes — no second weight copy) and
+verifies all K+1 positions in one chunk-shaped full-policy call,
+emitting the longest matching prefix. Greedy requests' tokens are
+bitwise identical to --speculate 0; sampled requests decode normally.
+--draft-policy picks the draft precision (w4a8 / w2a8 — the plane
+subset to keep). Requires a quant policy (--quant/--policy) and the
+paged pool. Draft/acceptance counters are reported after a continuous
+run.
+
 --plans FILE persists the kernel registry's block-plan cache (autotune
 winners, e.g. the paged-attention bh knob) across process restarts:
 loaded before serving if the file exists, written back on exit.
@@ -96,6 +107,15 @@ def main():
                     action="store_false", default=None,
                     help="disable Sarathi-style chunked prefill (solo "
                          "whole-prompt prefill at admission instead)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="self-speculative decoding: draft tokens per "
+                         "scheduler step from the truncated-plane view "
+                         "of the packed weights (0 = off; greedy "
+                         "requests only, needs --quant/--policy)")
+    ap.add_argument("--draft-policy", default="w4a8",
+                    help="draft precision for --speculate: the plane "
+                         "subset of the resident weights the draft "
+                         "contracts (e.g. w4a8, w2a8)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common N-token system prompt to every "
                          "synthetic request (exercises the prefix cache)")
@@ -108,6 +128,12 @@ def main():
         raise SystemExit("--quant and --policy are mutually exclusive")
     if args.continuous and args.static:
         raise SystemExit("--continuous and --static are mutually exclusive")
+    if args.speculate and not args.continuous:
+        raise SystemExit("--speculate runs inside the continuous "
+                         "scheduler; add --continuous")
+    if args.speculate and not (args.quant or args.policy):
+        raise SystemExit("--speculate drafts from the resident bit-plane "
+                         "weights; add a quant policy (e.g. --quant w8a8)")
     from repro.kernels import get_registry
 
     if args.backend:
@@ -164,7 +190,9 @@ def main():
                            pool_blocks=args.pool_blocks,
                            prefix_cache=args.prefix_cache,
                            chunked_prefill=args.chunked_prefill,
-                           prefill_budget=args.prefill_budget)
+                           prefill_budget=args.prefill_budget,
+                           speculate=args.speculate,
+                           draft_policy=args.draft_policy)
 
     def make_requests():
         # Self-contained stream: every call reproduces the exact same
@@ -231,6 +259,12 @@ def main():
                       f"shared a step with a chunk, "
                       f"{stats['prefill_tokens_per_step']:.1f} prefill "
                       f"tok/step")
+            if stats.get("speculate"):
+                print(f"  speculative decode: k={stats['speculate']}, "
+                      f"{stats['spec_accepted_tokens']}/"
+                      f"{stats['spec_draft_tokens']} drafts accepted "
+                      f"({stats['spec_acceptance_rate']:.0%}) over "
+                      f"{stats['spec_rounds']} rounds")
         elif stats:
             print(f"  contiguous KV cache: "
                   f"{stats['resident_kv_bytes']/1e6:.2f} MB resident "

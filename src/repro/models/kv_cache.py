@@ -613,6 +613,26 @@ def set_paged_row(batch: DecodeCache, solo: DecodeCache, slot,
         kv, block_table=table, length=length))
 
 
+def set_decode_positions(cache: DecodeCache, pos, length) -> DecodeCache:
+    """Overwrite every row's decode position and live length in one device
+    write — the speculative-decode bookkeeping op.
+
+    Drafting advances each row's ``pos``/``length`` one token per draft
+    step (the jitted decode step advances *all* rows) and the verify chunk
+    sets its slot past every drafted position; after greedy acceptance the
+    host knows the true position of every row (accepted prefix boundary
+    for speculating rows, the pre-draft value for everyone else) and
+    restores it here. Rejected positions' pool bytes are left stale — the
+    position mask (`kpos <= q_pos`) hides them from every subsequent read,
+    and the row's next writes land there anyway, so no pool rollback is
+    needed; the entire rollback IS this metadata write."""
+    kv: PagedKVCache = cache.kv
+    return DecodeCache(
+        pos=jnp.asarray(pos, jnp.int32),
+        kv=dataclasses.replace(kv, length=jnp.asarray(length, jnp.int32)),
+    )
+
+
 def copy_pool_block(cache: DecodeCache, src, dst) -> DecodeCache:
     """Copy-on-write support: duplicate pool block `src` into `dst` across
     every layer (k, v, and the int8 scale planes when present). The

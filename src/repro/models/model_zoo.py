@@ -89,6 +89,14 @@ def build_model(cfg: ModelConfig) -> SimpleNamespace:
             lambda params, cache, batch:
             mod.prefill_chunk(params, cfg, cache, batch)
         )
+        # All-position logits variant of the chunk call — the verify step
+        # of self-speculative decoding. Same eligibility: the draft/verify
+        # bit-identity argument leans on the chunked ≡ whole-prompt
+        # contract the chunk kernel already guarantees.
+        ns.prefill_chunk_logits = (
+            lambda params, cache, batch:
+            mod.prefill_chunk_logits(params, cfg, cache, batch)
+        )
     return ns
 
 

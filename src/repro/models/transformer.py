@@ -539,7 +539,8 @@ def prefill_suffix(params, cfg: ModelConfig, batch):
     return DecodeCache(pos=total, kv=kvc), logits
 
 
-def prefill_chunk(params, cfg: ModelConfig, cache: DecodeCache, batch):
+def prefill_chunk(params, cfg: ModelConfig, cache: DecodeCache, batch,
+                  all_logits: bool = False):
     """Prefill one token *chunk* of a single row's prompt directly against
     the shared paged pool — the decode-path model method behind
     Sarathi-style chunked prefill. Each layer runs the fused
@@ -570,7 +571,13 @@ def prefill_chunk(params, cfg: ModelConfig, cache: DecodeCache, batch):
     final chunk's logits are meaningful: they sample the first output
     token). Chunk boundaries never change the math — attention depends
     only on absolute positions and pool bytes — so any chunk split of a
-    prompt is bit-identical to the whole-prompt prefill."""
+    prompt is bit-identical to the whole-prompt prefill.
+
+    ``all_logits=True`` returns logits for every chunk position
+    ``(1, Lc, V)`` instead of the last real token — the speculative-decode
+    *verify* shape, where every position's argmax is compared against the
+    draft (see :func:`prefill_chunk_logits`). Positions past ``lengths[0]``
+    are padding; their logits are meaningless and must be ignored."""
     if cfg.attn_window:
         raise ValueError("chunked prefill requires a full-attention "
                          f"paged cache (attn_window={cfg.attn_window})")
@@ -612,8 +619,10 @@ def prefill_chunk(params, cfg: ModelConfig, cache: DecodeCache, batch):
     x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
         body, x, (params["blocks"], kv.k, kv.v, ks_in, vs_in)
     )
-    hidden = cm.apply_norm(cm.last_token_slice(x, lengths),
-                           params["final_norm"], cfg.norm)
+    hidden = (cm.apply_norm(x, params["final_norm"], cfg.norm)
+              if all_logits else
+              cm.apply_norm(cm.last_token_slice(x, lengths),
+                            params["final_norm"], cfg.norm))
     logits = compute_logits(params, cfg, hidden)
     total = start + length
     new_cache = DecodeCache(
@@ -625,6 +634,22 @@ def prefill_chunk(params, cfg: ModelConfig, cache: DecodeCache, batch):
                         block_size=kv.block_size),
     )
     return new_cache, logits
+
+
+def prefill_chunk_logits(params, cfg: ModelConfig, cache: DecodeCache, batch):
+    """Speculative-decode verify step: :func:`prefill_chunk` returning
+    logits for *every* chunk position ``(1, Lc, V)``.
+
+    The verify call is shaped exactly like a prefill chunk over
+    ``[current token, draft tokens]``: each position attends over the
+    row's pool-resident history plus the earlier chunk positions, and the
+    chunk K/V (recomputed at the *full* policy) overwrites the draft's
+    speculative pool writes — K/V projections are per-token functions of
+    (embedding, rope position), so the verified pool bytes are identical
+    to what plain decode would have written. Position i's argmax is the
+    token greedy decode would emit after accepting the first i chunk
+    tokens, which is what the acceptance rule compares against."""
+    return prefill_chunk(params, cfg, cache, batch, all_logits=True)
 
 
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array,

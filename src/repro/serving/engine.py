@@ -12,7 +12,12 @@ execution modes:
     and (for full-attention archs, by default) the paged block-pool KV
     cache — admission is bounded by actual resident tokens, not a per-slot
     `max_ctx` reservation — with cross-request prefix caching on top
-    (shared refcounted prompt-prefix blocks, suffix-only prefill).
+    (shared refcounted prompt-prefix blocks, suffix-only prefill). With
+    `speculate=k` greedy slots self-speculate: a truncated-plane view of
+    the resident packed weights drafts k tokens per step and one
+    chunk-shaped full-policy call verifies them (`repro.serving
+    .speculative`), emitting the longest matching prefix — bitwise the
+    non-speculative greedy stream.
   * `generate_static` — the classic static batch (batched prefill → decode
     loop, finished slots masked), kept as the baseline the serving
     benchmark measures continuous batching against. The decode loop exits
@@ -63,6 +68,8 @@ class ServingEngine:
         prefix_cache: Optional[bool] = None,
         chunked_prefill: Optional[bool] = None,
         prefill_budget: int = 32,
+        speculate: int = 0,
+        draft_policy: Union[str, QuantConfig] = "w4a8",
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -82,6 +89,8 @@ class ServingEngine:
         self.prefix_cache = prefix_cache    # None = auto (on if paged-able)
         self.chunked_prefill = chunked_prefill  # None = auto (on if eligible)
         self.prefill_budget = prefill_budget
+        self.speculate = speculate          # draft tokens/step (0 = off)
+        self.draft_policy = draft_policy    # plane-truncation draft spec
         self._sched: Optional[ContinuousScheduler] = None
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
@@ -119,6 +128,8 @@ class ServingEngine:
                 prefix_cache=self.prefix_cache,
                 chunked_prefill=self.chunked_prefill,
                 prefill_budget=self.prefill_budget,
+                speculate=self.speculate,
+                draft_policy=self.draft_policy,
             )
         self._sched.on_token = self.on_token  # pick up late reassignment
         return self._sched

@@ -83,9 +83,11 @@ from repro.models.kv_cache import (
     scatter_into_paged,
     scatter_into_slot,
     scatter_suffix_into_paged,
+    set_decode_positions,
     set_paged_row,
 )
 from repro.serving import sampling
+from repro.serving.speculative import derive_draft_params, greedy_accept
 
 
 def _contig_headroom() -> int:
@@ -118,6 +120,15 @@ class Request:
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     error: Optional[str] = None
+    # Per-request speculative-decoding counters (filled when the
+    # scheduler runs with `speculate`): draft tokens proposed for this
+    # request and how many of them greedy verification accepted.
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        return self.spec_accepted / self.spec_drafted if self.spec_drafted else 0.0
 
     @property
     def failed(self) -> bool:
@@ -154,6 +165,8 @@ class ContinuousScheduler:
         prefix_cache: Optional[bool] = None,
         chunked_prefill: Optional[bool] = None,
         prefill_budget: int = 32,
+        speculate: int = 0,
+        draft_policy: Union[str, QuantConfig] = "w4a8",
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -236,10 +249,52 @@ class ContinuousScheduler:
             self._chunk = jax.jit(self.model.prefill_chunk,
                                   donate_argnums=(1,))
         self._chunk_plans: Dict[int, dict] = {}   # slot → in-flight plan
-        self._chunk_queue: Deque[int] = collections.deque()  # FIFO slots
+        # Round-robin service order across in-flight chunk plans: the
+        # serviced slot rotates to the back each step, so one long prompt
+        # can't starve admissions queued behind it.
+        self._chunk_queue: Deque[int] = collections.deque()
         self.prefill_chunks_run = 0
         self.decode_steps_stalled = 0
         self.prefill_chunk_tokens = 0
+        # Steps on which a chunk actually ran — the denominator of the
+        # interleave ratio. (steps_run keeps growing after the last plan
+        # retires, which made the old tokens/steps_run ratio decay toward
+        # zero instead of reporting the achieved interleave.)
+        self.prefill_chunk_steps = 0
+
+        # -- self-speculative decoding (draft = plane-truncated view) ----
+        # Drafting reuses the decode step with *view* params (plane_lo on
+        # every packed leaf — same weight bytes, one extra jit trace) and
+        # verification reuses the chunked-prefill machinery with
+        # all-position logits, so speculation needs the same capability
+        # gate as chunked prefill plus a packed (quantized) weight set.
+        if speculate:
+            if speculate < 1:
+                raise ValueError("speculate must be >= 1 (0 disables)")
+            can_spec = (
+                paged
+                and getattr(self.model, "prefill_chunk_logits", None) is not None
+            )
+            if not can_spec:
+                raise ValueError(
+                    f"{cfg.name}: speculative decoding requires the paged "
+                    "KV cache and the chunked-prefill verify path "
+                    "(token-input, non-MoE full-attention transformer)"
+                )
+            # Raises with guidance when params carry no packed leaves
+            # (serve with --quant) or the draft truncates nothing.
+            self._draft_params, _ = derive_draft_params(self.params,
+                                                        draft_policy)
+            self._verify = jax.jit(self.model.prefill_chunk_logits,
+                                   donate_argnums=(1,))
+            self._set_positions = jax.jit(set_decode_positions,
+                                          donate_argnums=(0,))
+        self.speculate = int(speculate)
+        self.draft_policy = draft_policy
+        self.spec_draft_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_rounds = 0
+        self.spec_verify_calls = 0     # one full-policy chunk per slot/round
 
         B = max_batch
         if paged:
@@ -433,32 +488,68 @@ class ContinuousScheduler:
                 self._free.append(blk)
             self._avail += 1
 
+    def _ensure_private_block(self, b: int, j: int) -> None:
+        """Make virtual block `j` of row `b` writable: allocate it if the
+        table entry is empty, and copy-on-write when it is a block the row
+        shares (refcount > 1) with other rows or with the prefix cache —
+        the sharers keep the pristine block, the appender gets a private
+        copy (charged to its reservation like any other allocation)."""
+        blk = int(self._block_tab[b, j])
+        if blk < 0:
+            self._alloc_block(b, j)
+        elif self._refcnt[blk] > 1:
+            dst = self._take_free_block()
+            self._refcnt[dst] = 1
+            self.cache = self._cow(self.cache, blk, dst)
+            self._block_tab[b, j] = dst
+            self._decref(blk)
+            self._reserved[b] -= 1
+            self._table_dirty = True
+            self.cow_copies += 1
+            self._touch_peak()
+
     def _alloc_boundary_blocks(self) -> None:
-        """Back the position each live slot writes this step: allocate on a
-        block-boundary crossing, and copy-on-write when the write lands in
-        a block the row shares (refcount > 1) with other rows or with the
-        prefix cache — the sharers keep the pristine block, the appender
-        gets a private copy (charged to its reservation like any other
-        allocation)."""
+        """Back the position each live slot writes this step."""
         for b, req in enumerate(self._slots):
             if req is None or b in self._chunk_plans:
                 continue  # mid-chunk-prefill rows don't decode-append yet
             j = int(self._pos_host[b]) // self.block_size
             if j >= self._max_blocks:
                 continue
-            blk = int(self._block_tab[b, j])
-            if blk < 0:
-                self._alloc_block(b, j)
-            elif self._refcnt[blk] > 1:
-                dst = self._take_free_block()
-                self._refcnt[dst] = 1
-                self.cache = self._cow(self.cache, blk, dst)
-                self._block_tab[b, j] = dst
-                self._decref(blk)
-                self._reserved[b] -= 1
-                self._table_dirty = True
-                self.cow_copies += 1
-                self._touch_peak()
+            self._ensure_private_block(b, j)
+
+    def _alloc_blocks_through(self, b: int, last_pos: int) -> None:
+        """Back every position row `b` writes in a speculation round —
+        [pos, last_pos] spans the draft writes and the verify chunk — with
+        writable (private) blocks, before any of them runs. Positions
+        backed for draft tokens that verification then rejects stay
+        allocated: they sit inside the row's admission reservation and the
+        row's subsequent decode steps write them next anyway."""
+        first = int(self._pos_host[b]) // self.block_size
+        last = min(last_pos // self.block_size, self._max_blocks - 1)
+        for j in range(first, last + 1):
+            self._ensure_private_block(b, j)
+
+    def _push_spec_table(self, spec_slots) -> None:
+        """Device block table for the draft phase: only speculating rows
+        keep their real blocks. Every other row — live decoders, chunk
+        plans, free slots — is masked to -1, so the lockstep draft decode
+        steps route their writes to the trash block and attend over
+        nothing (their logits are discarded and their host `_cur` is
+        untouched). Without this, a draft step would append *draft-policy*
+        K/V at a non-speculating row's live position — possibly into a
+        block it shares with other rows. Marks the table dirty so the
+        real table is re-pushed before the normal decode."""
+        tab = self._block_tab.copy()
+        for b in range(self.max_batch):
+            if b not in spec_slots:
+                tab[b, :] = -1
+        self.cache = dataclasses.replace(
+            self.cache,
+            kv=dataclasses.replace(self.cache.kv,
+                                   block_table=jnp.asarray(tab)),
+        )
+        self._table_dirty = True
 
     def _sync_table(self) -> None:
         if self._table_dirty:
@@ -677,10 +768,23 @@ class ContinuousScheduler:
             "prefill_budget": self.prefill_budget,
             "prefill_chunks_run": self.prefill_chunks_run,
             "decode_steps_stalled": self.decode_steps_stalled,
-            # Prompt tokens prefilled per decode step — the interleave
-            # ratio (0 when admission never overlapped live decodes).
+            # Prompt tokens prefilled per chunk-spending step — the
+            # interleave ratio. Divided by the steps that actually ran a
+            # chunk, not total decode steps: the old steps_run denominator
+            # kept shrinking the ratio long after the last plan retired,
+            # so the "same" workload read differently depending on how
+            # many pure-decode steps followed it.
             "prefill_tokens_per_step":
-                self.prefill_chunk_tokens / max(self.steps_run, 1),
+                self.prefill_chunk_tokens / max(self.prefill_chunk_steps, 1),
+            "prefill_chunk_steps": self.prefill_chunk_steps,
+            # -- self-speculative decoding --
+            "speculate": self.speculate,
+            "spec_rounds": self.spec_rounds,
+            "spec_draft_tokens": self.spec_draft_tokens,
+            "spec_accepted_tokens": self.spec_accepted_tokens,
+            "spec_acceptance_rate":
+                (self.spec_accepted_tokens / self.spec_draft_tokens
+                 if self.spec_draft_tokens else 0.0),
         }
 
     def reset_pool_peak(self) -> None:
@@ -923,6 +1027,134 @@ class ContinuousScheduler:
         return (len(req.out_tokens) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id))
 
+    # -- self-speculative decoding -----------------------------------------
+
+    def _spec_phase(self) -> List[Request]:
+        """One speculation round: draft up to ``speculate`` tokens per
+        eligible slot with the truncated-plane view params (draft K/V
+        lands speculatively in the row's own pool blocks), then verify
+        each slot's ``[current token, drafts]`` window in ONE full-policy
+        chunk-shaped call and emit the longest matching prefix.
+
+        Eligibility: greedy slots only (acceptance compares argmaxes; a
+        sampled slot has no deterministic token to match), not mid-chunk-
+        prefill, and at least 2 tokens still owed (with 1 owed the normal
+        trailing decode is strictly cheaper than draft + verify).
+
+        Rollback is a metadata write: verification recomputes all k+1
+        positions at the full policy — per-token K/V overwrites the
+        draft's bytes in place — so rejecting a tail only requires
+        restoring ``pos``/``length`` to the accepted frontier
+        (:func:`set_decode_positions`). Rejected positions' stale pool
+        bytes are dead: decode attention masks ``kpos >= length`` and the
+        row's next steps write those very positions before reading them.
+        No copy-on-write is needed because every speculative write lands
+        at position >= the prompt length, inside blocks the round made
+        private up front (:meth:`_alloc_blocks_through`) — shared prefix
+        blocks are never touched, so the prefix cache's
+        partial-block-registers-at-retirement invariant survives."""
+        spec: Dict[int, int] = {}       # slot -> draft count this round
+        for b, req in enumerate(self._slots):
+            if req is None or b in self._chunk_plans:
+                continue
+            if req.temperature > 0:
+                continue
+            k_eff = min(self.speculate,
+                        req.max_new_tokens - len(req.out_tokens) - 1)
+            if k_eff >= 1:
+                spec[b] = k_eff
+        if not spec:
+            return []
+        # Back every position the round writes — draft appends at
+        # [pos, pos+k) and the verify chunk at [pos, pos+k] — before any
+        # kernel runs. All writes sit inside the row's admission
+        # reservation (pos + k <= prompt + max_new - 2).
+        for b, k_eff in spec.items():
+            self._alloc_blocks_through(b, int(self._pos_host[b]) + k_eff)
+        self._push_spec_table(set(spec))
+
+        # Lockstep draft: every speculating row advances one token per
+        # iteration through the ordinary decode step, but with the view
+        # params — same kernels, plane-truncated contraction. Rows that
+        # hit their own draft count early are masked out (their surplus
+        # writes would overrun their allocation).
+        active = set(spec)
+        drafts: Dict[int, List[int]] = {b: [] for b in spec}
+        cur = self._cur.copy()
+        for i in range(max(spec.values())):
+            todo = {b for b in active if len(drafts[b]) < spec[b]}
+            if todo != active:
+                active = todo
+                self._push_spec_table(active)
+            self.cache, logits = self._decode(self._draft_params, self.cache,
+                                              jnp.asarray(cur))
+            toks = np.asarray(jnp.argmax(
+                logits[:, -1, :].astype(jnp.float32), axis=-1))
+            for b in active:
+                drafts[b].append(int(toks[b]))
+                cur[b, 0] = int(toks[b])
+
+        # Verify: one chunk-shaped full-policy call per slot over
+        # [current token, d_1 .. d_k]. Fixed window (speculate + 1) keeps
+        # one compiled signature per bucketed block count; position i's
+        # argmax is the token sequential greedy decode would emit there.
+        finished: List[Request] = []
+        Lc = self.speculate + 1
+        gran = max(self.bucket // self.block_size, 1)
+        for b, k_eff in spec.items():
+            req = self._slots[b]
+            p = int(self._pos_host[b])
+            t = k_eff + 1
+            tokens = np.zeros((1, Lc), np.int32)
+            tokens[0, 0] = self._cur[b, 0]
+            tokens[0, 1:t] = drafts[b]
+            covering = -(-(p + t) // self.block_size)
+            nbp = min(self._max_blocks,
+                      max(gran, -(-covering // gran) * gran))
+            batch = {
+                "tokens": jnp.asarray(tokens),
+                "lengths": jnp.asarray([t], jnp.int32),
+                "start": jnp.asarray(p, jnp.int32),
+                "slot": jnp.asarray(b, jnp.int32),
+                "blocks": jnp.asarray(self._block_tab[b, :nbp]),
+            }
+            self.cache, logits = self._verify(self.params, self.cache, batch)
+            self.spec_verify_calls += 1
+            verify_toks = np.asarray(jnp.argmax(
+                logits[0, :t, :].astype(jnp.float32), axis=-1))
+            emitted = greedy_accept(verify_toks, drafts[b])
+            self.spec_draft_tokens += k_eff
+            self.spec_accepted_tokens += len(emitted) - 1
+            req.spec_drafted += k_eff
+            req.spec_accepted += len(emitted) - 1
+            m = 0
+            done = False
+            for tok in emitted:
+                req.out_tokens.append(tok)
+                self._emit(req, tok)
+                m += 1
+                if self._finished(req, tok):
+                    done = True
+                    break
+            self._pos_host[b] = p + m
+            self._steps[b] += m
+            if done:
+                self._release_slot(b)
+                finished.append(req)
+            else:
+                self._cur[b, 0] = emitted[m - 1]
+        # Roll every row back to its accepted frontier in one device
+        # write. Clobbering non-speculating rows is safe: chunk plans
+        # drive the chunk kernel with explicit start/length operands (the
+        # final chunk re-sets the device row), free rows already carry
+        # stale positions behind an all--1 table, and live decoders were
+        # position-synced with _pos_host before this round began.
+        pos = jnp.asarray(self._pos_host, jnp.int32)
+        self.cache = self._set_positions(self.cache, pos, pos)
+        self._table_dirty = True       # real table re-pushed before decode
+        self.spec_rounds += 1
+        return finished
+
     # -- the decode loop ----------------------------------------------------
 
     def step(self) -> List[Request]:
@@ -981,21 +1213,34 @@ class ContinuousScheduler:
                     continue
                 break
 
-        # Spend one budgeted chunk of admission prefill (FIFO across
-        # plans) alongside this step's decode.
+        # Spend one budgeted chunk of admission prefill alongside this
+        # step's decode — round-robin across queued plans: the serviced
+        # plan rotates to the back, so with several admissions in flight
+        # each spends one chunk every len(queue) steps and no prompt's
+        # first token waits for every earlier prompt to finish prefilling.
         chunk_ran = False
         if self._chunk_queue:
-            slot = self._chunk_queue[0]
+            slot = self._chunk_queue.popleft()
             chunk_ran = True
             done = self._run_chunk(slot)
-            if slot not in self._chunk_plans:
-                self._chunk_queue.popleft()
-                if done is not None:
-                    finished.append(done)
+            if slot in self._chunk_plans:
+                self._chunk_queue.append(slot)  # unfinished: back of line
+            elif done is not None:
+                finished.append(done)
+            self.prefill_chunk_steps += 1
 
         if not any(r is not None and b not in self._chunk_plans
                    for b, r in enumerate(self._slots)):
             return finished  # nothing decodes: only chunk plans in flight
+
+        if self.speculate:
+            # Speculation rounds replace several sequential decode steps
+            # for greedy slots; survivors still join the trailing decode
+            # below, which is exactly their next sequential step.
+            finished.extend(self._spec_phase())
+            if not any(r is not None and b not in self._chunk_plans
+                       for b, r in enumerate(self._slots)):
+                return finished  # every live slot retired mid-round
 
         if chunk_ran:
             self.decode_steps_stalled += 1

@@ -1,0 +1,147 @@
+"""Self-speculative decoding from the resident bit-plane weights.
+
+M4BRAM's thesis is that one resident copy of the data serves multiple
+computational roles. Our serving stack stores weights as little-endian
+2-bit planes (``repro.core.bitplane``), so a low-precision *draft* model
+is already resident: contracting only the top planes of the packed w8
+weights is a w4/w2 forward pass with zero extra weight memory. This
+module is the policy half of that subsystem:
+
+  * :func:`derive_draft_params` — turn the serving params into a draft
+    view by setting ``plane_lo`` on every packed leaf. The view is
+    *pure*: leaves (packed bytes, scales) are identity-shared with the
+    target params; only pytree aux data changes, so the draft forward
+    pass is one extra jit trace, never a second weight copy.
+  * :func:`greedy_accept` — the acceptance rule. Every emitted token is
+    a full-policy verify argmax (the draft only decides *how many* of
+    them land per step), which is why greedy speculation is bitwise
+    identical to non-speculative greedy decode.
+
+The scheduling half lives in ``ContinuousScheduler.step()``: draft k
+tokens per eligible slot with the view params (speculative K/V appended
+into the row's own pool blocks), then verify all k+1 positions in one
+chunk-shaped full-policy call (``prefill_chunk_logits``) whose K/V
+writes overwrite the draft's, and roll back positions/lengths for the
+rejected tail (:func:`repro.models.kv_cache.set_decode_positions`).
+
+Plane math (see ``kernels/bitplane_matmul.py`` for the derivation): a
+w8 leaf served at w4 drops ``lo = (8-4)/2 = 2`` planes, at w2 drops 3;
+a w4 leaf served at w2 drops 1. The truncated contraction reads (in the
+paper's layout) ``draft_bits / target_bits`` of the weight bytes — the
+latency story ``benchmarks/spec_bench.py`` models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple, Union
+
+import jax
+
+from repro.core.precision import parse_quant_token
+from repro.core.quant import QuantConfig
+from repro.core.quantized_linear import PackedWeight
+
+PLANE_BITS = 2
+
+
+def parse_draft_spec(spec: Union[str, QuantConfig]) -> QuantConfig:
+    """Normalize a ``--draft-policy`` value ("w2a8" / "w4a8" or an
+    already-built QuantConfig). Drafts are pure plane truncations, so the
+    Table-III mixed-group ratio ("rZZ") has no meaning here."""
+    cfg = spec if isinstance(spec, QuantConfig) else parse_quant_token(str(spec))
+    if cfg.mixed_ratio_8b:
+        raise ValueError(
+            "draft policy is a plane truncation of the resident weights; "
+            f"a mixed 8-bit filter group ({spec!r}) cannot be expressed "
+            "as a plane subset"
+        )
+    return cfg
+
+
+def plane_offset(target_bits: int, draft_bits: int) -> int:
+    """Number of low 2-bit planes to drop so `target_bits` storage serves
+    a `draft_bits` contraction. 0 when the leaf is already at or below the
+    draft precision (nothing to truncate — the draft just runs it as-is)."""
+    if draft_bits >= target_bits:
+        return 0
+    drop = target_bits - draft_bits
+    if drop % PLANE_BITS:
+        raise ValueError(
+            f"cannot serve w{target_bits} storage at w{draft_bits}: the "
+            f"precision gap must be a whole number of {PLANE_BITS}-bit "
+            "planes"
+        )
+    lo = drop // PLANE_BITS
+    if PLANE_BITS * lo >= target_bits:
+        raise ValueError(
+            f"plane_lo={lo} leaves no planes of a w{target_bits} weight"
+        )
+    return lo
+
+
+def derive_draft_params(params, draft: Union[str, QuantConfig]) -> Tuple[object, int]:
+    """Draft-policy view of served params: every PackedWeight leaf whose
+    precision exceeds the draft's gets ``plane_lo`` set so its matmuls
+    contract only the top planes. Returns ``(draft_params, truncated)``.
+
+    The view shares every array leaf with the target params by identity
+    (``id(draft.packed) == id(target.packed)``) — asserted by tests and
+    the point of the whole exercise. Raises if the params carry no packed
+    leaves (serve with a quant policy first) or if the draft spec doesn't
+    truncate anything (target already at or below draft precision)."""
+    cfg = parse_draft_spec(draft)
+    counts = {"packed": 0, "truncated": 0}
+
+    def view(leaf):
+        if not isinstance(leaf, PackedWeight):
+            return leaf
+        counts["packed"] += 1
+        lo = plane_offset(leaf.bits, cfg.w_bits)
+        if lo == 0:
+            return leaf
+        if leaf.a_bits != cfg.a_bits:
+            raise ValueError(
+                f"draft policy w{cfg.w_bits}a{cfg.a_bits} changes the "
+                f"activation precision of a w{leaf.bits}a{leaf.a_bits} "
+                "leaf; plane truncation only lowers weight bits — use "
+                f"a{leaf.a_bits} in the draft spec"
+            )
+        counts["truncated"] += 1
+        return dataclasses.replace(leaf, plane_lo=lo)
+
+    draft_params = jax.tree_util.tree_map(
+        view, params, is_leaf=lambda l: isinstance(l, PackedWeight)
+    )
+    if not counts["packed"]:
+        raise ValueError(
+            "self-speculative decoding needs bit-plane-packed weights: "
+            "serve with a quant policy (e.g. --quant w8a8) so the draft "
+            "can truncate the resident planes"
+        )
+    if not counts["truncated"]:
+        raise ValueError(
+            f"draft policy w{cfg.w_bits} truncates no leaf: every packed "
+            "weight is already at or below the draft precision"
+        )
+    return draft_params, counts["truncated"]
+
+
+def greedy_accept(
+    verify_tokens: Sequence[int], draft_tokens: Sequence[int]
+) -> List[int]:
+    """Longest-matching-prefix acceptance for greedy speculation.
+
+    ``verify_tokens[i]`` is the full-policy argmax at chunk position i of
+    the verify call over ``[current token, d_1 .. d_k]`` — i.e. the token
+    greedy decode would emit after accepting the first i draft tokens.
+    Accept while ``d_{i+1} == verify_tokens[i]``; the returned list is
+    ``[g_0, .., g_m]`` with every element a *verify* argmax (between 1
+    and k+1 tokens — the last is the free "bonus" token when all drafts
+    match). The draft never contributes a token, only the count, so the
+    emitted stream is bitwise the sequential greedy stream."""
+    emitted = [int(verify_tokens[0])]
+    for i, d in enumerate(draft_tokens):
+        if int(d) != emitted[-1]:
+            break
+        emitted.append(int(verify_tokens[i + 1]))
+    return emitted

@@ -1,0 +1,307 @@
+"""Self-speculative decoding from the resident bit-plane weights.
+
+The contract has three layers:
+
+  * plane truncation is *requantization by arithmetic shift*: contracting
+    only planes [lo:] of b-bit codes equals quantizing the codes to
+    (b - 2·lo) bits (shift) and matmul-ing at the lower width — exact
+    integer equality, kernel and reference;
+  * the draft is a *view*: ``derive_draft_params`` shares every packed
+    buffer with the target params by identity — speculation never copies
+    weight bytes;
+  * greedy speculation is a *scheduling* change only: every emitted token
+    is a full-policy verify argmax (the draft only decides how many land
+    per step), so the token stream is bitwise identical to non-speculative
+    greedy decode — across solo/continuous serving, bf16/int8 pools,
+    draft precisions, and mid-decode admission.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.quant import QuantConfig
+from repro.core.quantized_linear import PackedWeight, quantize_params_for_serving
+from repro.kernels import ops, ref
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Request
+from repro.serving.speculative import (
+    derive_draft_params,
+    greedy_accept,
+    plane_offset,
+)
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(7)
+BS = 4
+Q8 = QuantConfig(w_bits=8, a_bits=8)
+PROMPT_A = np.zeros(8, np.int64)          # degenerate: drafts stay on-script
+PROMPT_B = (np.arange(11) * 5 + 2) % 64   # non-divisor of block/bucket
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _sched(cfg, params, speculate, draft="w4a8", **kw):
+    kw.setdefault("max_ctx", 64)
+    return ContinuousScheduler(cfg, params, max_batch=2, bucket=16,
+                               quant=Q8, paged=True, block_size=BS,
+                               chunked_prefill=True, prefill_budget=8,
+                               speculate=speculate, draft_policy=draft, **kw)
+
+
+def _drain(sched):
+    out = []
+    while sched.num_active or sched.num_waiting:
+        out.extend(sched.step())
+    return out
+
+
+def _serve_one(cfg, params, prompt, n, speculate, draft="w4a8", **kw):
+    sched = _sched(cfg, params, speculate, draft, **kw)
+    sched.submit(Request(1, prompt, max_new_tokens=n))
+    return _drain(sched)[0].out_tokens, sched
+
+
+# -- plane truncation = shift requantization (exact, kernel + ref) --------
+
+TRUNCATIONS = [(8, 2), (8, 3), (4, 1)]  # w8->w4, w8->w2, w4->w2
+
+
+@pytest.mark.parametrize("w_bits,lo", TRUNCATIONS)
+@pytest.mark.parametrize("act_signed", [True, False])
+def test_truncated_matmul_is_requantized_matmul(w_bits, lo, act_signed):
+    """bitplane_matmul with w_plane_lo equals quantizing the codes to
+    (w_bits - 2*lo) bits (arithmetic shift — sign plane stays on top) and
+    contracting at the lower width. Exact integers, both backends."""
+    a_lo, a_hi = (-128, 128) if act_signed else (0, 256)
+    x = RNG.integers(a_lo, a_hi, (9, 64)).astype(np.int32)
+    w = RNG.integers(-(1 << (w_bits - 1)), 1 << (w_bits - 1),
+                     (64, 17)).astype(np.int32)
+    w_low = w >> (2 * lo)                      # requantized codes
+    # the shifted codes are valid signed (w_bits - 2*lo)-bit codes
+    b = w_bits - 2 * lo
+    assert w_low.min() >= -(1 << (b - 1)) and w_low.max() < (1 << (b - 1))
+    want = x @ w_low
+    got_k = np.asarray(ops.bitplane_matmul(
+        jnp.asarray(x), jnp.asarray(w), a_bits=8, act_signed=act_signed,
+        w_plane_lo=lo))
+    got_r = np.asarray(ref.bitplane_matmul_ref(
+        jnp.asarray(x), jnp.asarray(w), 8, act_signed, w_plane_lo=lo))
+    np.testing.assert_array_equal(got_k, want)
+    np.testing.assert_array_equal(got_r, want)
+
+
+@pytest.mark.parametrize("w_bits,lo", TRUNCATIONS)
+def test_fused_matmul_plane_lo(w_bits, lo):
+    """The fused quantize+matmul path truncates identically."""
+    x = jnp.asarray(RNG.standard_normal((5, 64)), jnp.float32)
+    w = RNG.integers(-(1 << (w_bits - 1)), 1 << (w_bits - 1),
+                     (64, 9)).astype(np.int32)
+    acc, xs = ops.fused_quantize_matmul(x, jnp.asarray(w), a_bits=8,
+                                        w_plane_lo=lo)
+    acc0, xs0 = ops.fused_quantize_matmul(x, jnp.asarray(w >> (2 * lo)),
+                                          a_bits=8)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc0))
+    np.testing.assert_array_equal(np.asarray(xs), np.asarray(xs0))
+
+
+def test_plane_offset():
+    assert plane_offset(8, 4) == 2
+    assert plane_offset(8, 2) == 3
+    assert plane_offset(4, 2) == 1
+    assert plane_offset(4, 8) == 0          # nothing to drop
+    with pytest.raises(ValueError):
+        plane_offset(8, 3)                  # odd gap: not whole planes
+
+
+# -- the draft is a pure view of the resident packed weights --------------
+
+def test_draft_params_share_packed_buffers(olmo):
+    cfg, params = olmo
+    qp = quantize_params_for_serving(params, Q8, min_size=1024)
+    draft, truncated = derive_draft_params(qp, "w4a8")
+    assert truncated > 0
+    packed = [l for l in jax.tree_util.tree_leaves(
+        qp, is_leaf=lambda l: isinstance(l, PackedWeight))
+        if isinstance(l, PackedWeight)]
+    draft_packed = [l for l in jax.tree_util.tree_leaves(
+        draft, is_leaf=lambda l: isinstance(l, PackedWeight))
+        if isinstance(l, PackedWeight)]
+    assert len(packed) == len(draft_packed)
+    for a, b in zip(packed, draft_packed):
+        assert b.packed is a.packed         # identity: zero weight bytes
+        assert b.scale is a.scale
+        assert b.plane_lo == plane_offset(a.bits, 4)
+
+
+def test_draft_spec_validation(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="quant policy"):
+        derive_draft_params(params, "w4a8")  # no packed leaves
+    qp = quantize_params_for_serving(params, Q8, min_size=1024)
+    with pytest.raises(ValueError, match="truncates no leaf"):
+        derive_draft_params(qp, "w8a8")
+    with pytest.raises(ValueError, match="activation precision"):
+        derive_draft_params(qp, "w4a4")
+    with pytest.raises(ValueError, match="mixed"):
+        derive_draft_params(qp, "w4a8r25")
+
+
+def test_greedy_accept():
+    # no drafts match: only the verify token at position 0 lands
+    assert greedy_accept([5, 6, 7], [9, 9]) == [5]
+    # all match: k accepted + the bonus token
+    assert greedy_accept([5, 6, 7], [5, 6]) == [5, 6, 7]
+    # prefix match
+    assert greedy_accept([5, 6, 7], [5, 9]) == [5, 6]
+    assert greedy_accept([5], []) == [5]
+
+
+# -- greedy bit-identity across the serving matrix ------------------------
+
+@pytest.mark.parametrize("k", [2, 4])
+@pytest.mark.parametrize("draft", ["w2a8", "w4a8"])
+def test_bit_identity_solo(olmo, k, draft):
+    cfg, params = olmo
+    ref_toks, _ = _serve_one(cfg, params, PROMPT_B, 10, 0)
+    got, sched = _serve_one(cfg, params, PROMPT_B, 10, k, draft)
+    assert got == ref_toks
+    assert sched.spec_rounds > 0
+    assert sched.spec_draft_tokens > 0
+
+
+@pytest.mark.parametrize("kv_int8", [False, True])
+def test_bit_identity_int8_pool(olmo, kv_int8):
+    cfg, params = olmo
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_quant=True)
+    ref_toks, _ = _serve_one(cfg, params, PROMPT_A, 12, 0)
+    got, sched = _serve_one(cfg, params, PROMPT_A, 12, 4, "w4a8")
+    assert got == ref_toks
+    assert sched.pool_stats()["spec_acceptance_rate"] > 0
+
+
+def test_bit_identity_mid_decode_admission(olmo):
+    """A request admitted into a live speculating batch: both streams
+    match their non-speculative runs, and a sampled (non-greedy) slot
+    sharing the batch decodes normally throughout."""
+    cfg, params = olmo
+
+    def serve(k):
+        sched = _sched(cfg, params, k)
+        sched.submit(Request(0, PROMPT_A, max_new_tokens=14))
+        done = []
+        for _ in range(3):
+            done.extend(sched.step())
+        sched.submit(Request(1, PROMPT_B, max_new_tokens=8,
+                             temperature=0.7))
+        done.extend(_drain(sched))
+        return {r.rid: r.out_tokens for r in done}, sched
+
+    ref_streams, _ = serve(0)
+    got, sched = serve(4)
+    assert got == ref_streams
+    assert sched.spec_rounds > 0
+
+
+def test_acceptance_counters(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params, 4, "w4a8")
+    req = Request(1, PROMPT_A, max_new_tokens=16)
+    sched.submit(req)
+    _drain(sched)
+    st = sched.pool_stats()
+    assert st["speculate"] == 4
+    assert st["spec_draft_tokens"] >= st["spec_accepted_tokens"] > 0
+    assert st["spec_acceptance_rate"] == pytest.approx(
+        st["spec_accepted_tokens"] / st["spec_draft_tokens"])
+    # the per-request counters mirror the scheduler totals (solo run)
+    assert req.spec_drafted == st["spec_draft_tokens"]
+    assert req.spec_accepted == st["spec_accepted_tokens"]
+    assert req.spec_acceptance_rate == pytest.approx(
+        st["spec_acceptance_rate"])
+
+
+def test_speculation_requires_packed_weights(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="quant policy"):
+        ContinuousScheduler(cfg, params, max_batch=2, paged=True,
+                            block_size=BS, max_ctx=64, speculate=4)
+
+
+# -- prefix cache: partial-block invariant survives rollback --------------
+
+def test_prefix_cache_after_speculative_retirement(olmo):
+    """A speculating request's retirement registers its partial prompt
+    block as usual; a same-prompt follower hits the prefix cache and
+    still matches the non-speculative stream (speculative writes only
+    ever land at positions >= the prompt length, so registered prompt
+    bytes are never touched by a rejected draft)."""
+    cfg, params = olmo
+    ref_toks, _ = _serve_one(cfg, params, PROMPT_B, 10, 0)
+
+    sched = _sched(cfg, params, 4, "w4a8")
+    sched.submit(Request(1, PROMPT_B, max_new_tokens=10))
+    first = _drain(sched)[0].out_tokens
+    sched.submit(Request(2, PROMPT_B, max_new_tokens=10))
+    second = _drain(sched)[0].out_tokens
+    st = sched.pool_stats()
+    assert first == ref_toks
+    assert second == ref_toks
+    assert st["prefix_hit_tokens"] > 0      # follower reused prompt blocks
+
+
+# -- satellite: chunk-plan round-robin fairness ---------------------------
+
+def test_chunk_queue_round_robin(olmo):
+    """Two admissions with in-flight chunk plans share the per-step chunk
+    budget round-robin: both plans make progress while both are live,
+    instead of the second prompt's first token waiting for the first
+    prompt to finish prefilling entirely."""
+    cfg, params = olmo
+    long_a = (np.arange(40) * 3 + 1) % 64
+    long_b = (np.arange(40) * 7 + 5) % 64
+    ref_a, _ = _serve_one(cfg, params, long_a, 4, 0, max_ctx=64)
+    ref_b, _ = _serve_one(cfg, params, long_b, 4, 0, max_ctx=64)
+
+    sched = _sched(cfg, params, 0, max_ctx=64, pool_blocks=40)
+    sched.submit(Request(0, long_a, max_new_tokens=4))
+    sched.step()                            # admit A, run its first chunk
+    sched.submit(Request(1, long_b, max_new_tokens=4))
+    interleaved = False
+    done = []
+    for _ in range(40):
+        done.extend(sched.step())
+        progress = {b: plan["next"] for b, plan in sched._chunk_plans.items()}
+        if len(progress) == 2 and all(0 < p for p in progress.values()):
+            interleaved = True
+        if not (sched.num_active or sched.num_waiting):
+            break
+    assert interleaved, "both plans should advance while both are live"
+    got = {r.rid: r.out_tokens for r in done}
+    assert got[0] == ref_a and got[1] == ref_b
+
+
+# -- satellite: prefill_tokens_per_step isn't diluted by late decodes -----
+
+def test_prefill_tokens_per_step_stable_after_plans_retire(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params, 0)
+    sched.submit(Request(0, PROMPT_B, max_new_tokens=2))
+    sched.submit(Request(1, np.zeros(30, np.int64), max_new_tokens=20))
+    while sched._chunk_plans or sched.num_waiting:
+        sched.step()
+    at_retire = sched.pool_stats()["prefill_tokens_per_step"]
+    assert at_retire > 0
+    _drain(sched)                           # many pure-decode steps
+    st = sched.pool_stats()
+    assert st["prefill_tokens_per_step"] == pytest.approx(at_retire)
+    assert st["prefill_chunk_steps"] > 0
