@@ -22,6 +22,7 @@ from benchmarks import (
     serving_bench,
     spec_bench,
     table3_intralayer,
+    tier_bench,
 )
 
 MODULES = {
@@ -37,6 +38,7 @@ MODULES = {
     "serving": serving_bench,
     "prefix": prefix_bench,
     "spec": spec_bench,
+    "tiers": tier_bench,
 }
 
 

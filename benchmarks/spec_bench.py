@@ -33,25 +33,12 @@ from benchmarks.common import emit
 
 def _packed_weight_bytes(params, draft_bits=None):
     """Total packed GEMM weight bytes in `params`; with `draft_bits`, the
-    bytes a truncated-plane draft actually streams (top planes only)."""
-    import jax
+    bytes a truncated-plane draft actually streams (top planes only).
+    Thin alias of :func:`repro.core.quantized_linear.packed_weight_bytes`
+    (shared with ``benchmarks/tier_bench.py``)."""
+    from repro.core.quantized_linear import packed_weight_bytes
 
-    from repro.core.quantized_linear import PackedWeight
-    from repro.serving.speculative import PLANE_BITS, plane_offset
-
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(
-            params, is_leaf=lambda l: isinstance(l, PackedWeight)):
-        if not isinstance(leaf, PackedWeight):
-            continue
-        nbytes = int(leaf.packed.nbytes)
-        if leaf.packed8 is not None:
-            nbytes += int(leaf.packed8.nbytes)
-        if draft_bits is not None:
-            lo = plane_offset(leaf.bits, draft_bits)
-            nbytes = nbytes * (leaf.bits - PLANE_BITS * lo) // leaf.bits
-        total += nbytes
-    return total
+    return packed_weight_bytes(params, draft_bits)
 
 
 def _serve(cfg, params, quant, k, draft, prompts, max_new):
@@ -119,7 +106,9 @@ def run(quick: bool = False) -> dict:
             # Weight bytes: every decode step streams W once (batched —
             # shared across slots), every draft step streams the plane
             # fraction once (also batched), and every verify call streams
-            # W (one chunk call per speculating slot per round).
+            # W. Verify is batched too (one multi-row call per tier group
+            # per round — all slots here are untiered, so one per round),
+            # which the spec_verify_calls counter already reflects.
             step_bytes = (steps * W + rounds * k * frac[draft] * W
                           + sched.spec_verify_calls * W)
             row = {

@@ -1,0 +1,168 @@
+"""Per-request precision tiers benchmark: tokens per step and the modeled
+per-token weight traffic, swept over tier mixes in one continuous batch.
+
+One w8a8 packed weight set serves three quality–latency classes — w8a8,
+w4a8, w2a8 — as plane-truncated views (``core.precision
+.truncate_policy_view``): a tier-T decode call contracts only the top
+``T/8`` of the resident weight bytes, so lower-tier requests stream less
+HBM per step with zero extra weight memory. The scheduler runs one
+decode call per tier group per step; each group call streams its tier's
+byte fraction once, shared across the group's slots. Modeled weight
+bytes per token for a mix is therefore
+
+    Σ_tier decode_calls[tier] · frac(tier) · W  /  emitted tokens
+
+where frac(w8)=1, frac(w4)=1/2, frac(w2)=1/4 of the packed bytes W —
+exactly the fractions ``spec_bench`` models for drafts, because tier
+views and draft views are the same code path. Wall time in CPU
+interpret/jit mode tracks call counts, not TPU bytes; the modeled bytes
+column is the TPU-relevant number.
+
+Quality is not modeled here (random init): the benchmark's correctness
+claim is the bit-identity contract, asserted in-run — every request in
+every mix must produce tokens bitwise identical to a solo engine whose
+single configured tier (and every request) is that request's tier.
+
+Run:  PYTHONPATH=src python -m benchmarks.tier_bench [--quick]
+Writes BENCH_tiers.json at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+TIER_BITS = {"w8a8": 8, "w4a8": 4, "w2a8": 2}
+
+# (name, per-request tier assignment) — cycled over the request list.
+MIXES = [
+    ("all_w8", ["w8a8"]),
+    ("mixed_w8_w4_w2", ["w8a8", "w4a8", "w2a8"]),
+    ("all_w4", ["w4a8"]),
+    ("all_w2", ["w2a8"]),
+]
+
+
+def _serve(cfg, params, quant, tiers, assignment, prompts, max_new):
+    import numpy as np
+
+    from repro.serving import ContinuousScheduler, Request
+
+    sched = ContinuousScheduler(
+        cfg, params, max_batch=3, max_ctx=64, quant=quant, bucket=16,
+        paged=True, block_size=4, chunked_prefill=True, prefill_budget=8,
+        tiers=tiers)
+    reqs = [Request(rid=i, prompt=np.asarray(p), max_new_tokens=max_new,
+                    tier=assignment[i % len(assignment)])
+            for i, p in enumerate(prompts)]
+    done = sched.run(reqs)
+    return done, sched
+
+
+def run(quick: bool = False) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_reduced_config
+    from repro.core.quant import QuantConfig
+    from repro.core.quantized_linear import (
+        packed_weight_bytes,
+        quantize_params_for_serving,
+    )
+    from repro.models import build_model
+
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    quant = QuantConfig(w_bits=8, a_bits=8)
+
+    qp = quantize_params_for_serving(params, quant, min_size=1024)
+    W = packed_weight_bytes(qp)
+    frac = {t: packed_weight_bytes(qp, b) / W for t, b in TIER_BITS.items()}
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 7 + i).astype(np.int64)
+               for i in range(2 if quick else 3)]
+    max_new = 8 if quick else 16
+    mixes = MIXES[:2] if quick else MIXES
+
+    # Solo references, one per tier: every request pinned to that tier in
+    # an engine whose only configured tier is that tier — the engine the
+    # bit-identity contract names. Computed once, reused across mixes.
+    solo_streams = {}
+    for tier in TIER_BITS:
+        done, _ = _serve(cfg, params, quant, tier, [tier], prompts, max_new)
+        solo_streams[tier] = {r.rid: r.out_tokens for r in done}
+
+    rows = []
+    results = {}
+    for name, assignment in mixes:
+        tiers = ",".join(dict.fromkeys(assignment))
+        done, sched = _serve(cfg, params, quant, tiers, assignment,
+                             prompts, max_new)
+        # Bit-identity: request i at tier T inside the mix == the same
+        # request in the solo tier-T engine, token for token.
+        for r in done:
+            tier = assignment[r.rid % len(assignment)]
+            assert r.out_tokens == solo_streams[tier][r.rid], (
+                f"{name}: request {r.rid} at {tier} diverged from solo")
+        st = sched.pool_stats()
+        tokens = sum(len(r.out_tokens) for r in done)
+        steps = sched.steps_run
+        # Each tier-group decode call streams that tier's plane fraction
+        # of the packed bytes once, shared across the group's rows.
+        step_bytes = sum(tc["decode_calls"] * frac[t] * W
+                         for t, tc in st["tiers"].items() if t in frac)
+        row = {
+            "mix": name, "tiers": tiers,
+            "tokens": tokens, "steps": steps,
+            "tokens_per_step": round(tokens / max(steps, 1), 3),
+            "decode_calls": {t: tc["decode_calls"]
+                             for t, tc in st["tiers"].items()
+                             if tc["decode_calls"]},
+            "weight_bytes_per_token_model":
+                round(step_bytes / max(tokens, 1)),
+            "vs_all_w8_bytes_per_token": None,  # filled below
+        }
+        rows.append(row)
+        results[f"{name}_tokens_per_step"] = row["tokens_per_step"]
+        emit(f"tiers/{name}", 0.0,
+             f"tok/step={row['tokens_per_step']} "
+             f"bytes/tok={row['weight_bytes_per_token_model']}")
+    base = next(r for r in rows if r["mix"] == "all_w8")
+    for row in rows:
+        row["vs_all_w8_bytes_per_token"] = round(
+            row["weight_bytes_per_token_model"]
+            / max(base["weight_bytes_per_token_model"], 1), 3)
+
+    if quick:
+        return results
+    bench_path = Path(__file__).resolve().parents[1] / "BENCH_tiers.json"
+    bench_path.write_text(json.dumps({
+        "note": ("per-request precision tiers on the reduced olmo-1b at "
+                 "random init (greedy; every request's tokens asserted "
+                 "bitwise identical in-run to a solo engine pinned to its "
+                 "tier). weight_bytes_per_token_model is MODELED, not "
+                 "measured: a tier-T decode call streams T/8 of the one "
+                 "packed w8a8 buffer (plane truncation — same fractions "
+                 "as the speculative drafts), once per tier group per "
+                 "step. Mixed batches pay one group call per distinct "
+                 "tier, so bytes/token interpolates between the pure "
+                 "mixes as the tier population shifts"),
+        "config": {"arch": "olmo-1b (reduced)", "quant": "w8a8",
+                   "packed_weight_bytes": W,
+                   "tier_weight_frac": {t: round(f, 3)
+                                        for t, f in frac.items()},
+                   "max_new": max_new, "prompts": len(prompts)},
+        "rows": rows,
+    }, indent=2) + "\n")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer cells, no JSON artifact (CI smoke)")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -76,11 +76,17 @@ class PrecisionPolicy:
         return "; ".join(parts)
 
 
-def _fmt_cfg(cfg: QuantConfig) -> str:
+def quant_token(cfg: QuantConfig) -> str:
+    """Canonical "wXaY[rZZ]" token for a config — the inverse of
+    :func:`parse_quant_token`, used as the stable key for precision tiers
+    (`pool_stats()["tiers"]`, per-request `Request.tier` strings)."""
     s = f"w{cfg.w_bits}a{cfg.a_bits}"
     if cfg.mixed_ratio_8b:
         s += f"r{int(round(cfg.mixed_ratio_8b * 100))}"
     return s
+
+
+_fmt_cfg = quant_token
 
 
 def as_policy(
@@ -199,3 +205,144 @@ def policy_from_dse(
 
     default = QuantConfig(w_bits=max(w_candidates), a_bits=a_bits)
     return PrecisionPolicy(default=default, rules=tuple(rules))
+
+
+# -- precision tiers: plane-truncated views of one packed weight set -------
+#
+# M4BRAM's headline property is that one resident copy of the data serves
+# many precisions. The serving analogue: weights are stored once as
+# little-endian 2-bit planes (``repro.core.bitplane``), and any precision
+# at or below the storage width is a *view* — contract only the top
+# planes (``PackedWeight.plane_lo``), never copy a byte. Speculative
+# drafts (PR 7) and per-request serving tiers are the same mechanism, so
+# both route through :func:`truncate_policy_view` here.
+
+PLANE_BITS = 2
+
+
+def parse_tier_token(spec: Union[str, QuantConfig]) -> QuantConfig:
+    """Normalize one tier/draft token ("w4a8" or an already-built
+    QuantConfig). Tiers are pure plane truncations of the stored planes,
+    so the Table-III mixed 8-bit filter-group ratio ("rZZ") is rejected:
+    a filter-group split changes *which channels* are 8-bit, which cannot
+    be expressed as a plane subset of the resident codes."""
+    cfg = spec if isinstance(spec, QuantConfig) else parse_quant_token(str(spec))
+    if cfg.mixed_ratio_8b:
+        raise ValueError(
+            "a precision tier is a plane truncation of the resident "
+            f"weights; a mixed 8-bit filter group ({quant_token(cfg)!r}) "
+            "cannot be expressed as a plane subset"
+        )
+    return cfg
+
+
+def parse_tier_specs(
+    spec: Union[str, Sequence[Union[str, QuantConfig]]]
+) -> Tuple[QuantConfig, ...]:
+    """Parse a ``--tiers`` value ("w8a8,w4a8,w2a8", or a sequence of
+    tokens/QuantConfigs) into an ordered tuple of tier configs. Each
+    token goes through :func:`parse_tier_token` (no "rZZ"); duplicates
+    are rejected because tier keys name counter buckets and jit traces."""
+    if isinstance(spec, str):
+        tokens: Sequence = [t.strip() for t in spec.split(",") if t.strip()]
+    else:
+        tokens = list(spec)
+    if not tokens:
+        raise ValueError(f"empty tier spec {spec!r}")
+    out: List[QuantConfig] = []
+    seen = set()
+    for tok in tokens:
+        cfg = parse_tier_token(tok)
+        key = quant_token(cfg)
+        if key in seen:
+            raise ValueError(f"duplicate precision tier {key!r} in {spec!r}")
+        seen.add(key)
+        out.append(cfg)
+    return tuple(out)
+
+
+def plane_offset(target_bits: int, view_bits: int) -> int:
+    """Number of low 2-bit planes to drop so `target_bits` storage serves
+    a `view_bits` contraction. 0 when the leaf is already at or below the
+    view precision (nothing to truncate — the view runs it as-is)."""
+    if view_bits >= target_bits:
+        return 0
+    drop = target_bits - view_bits
+    if drop % PLANE_BITS:
+        raise ValueError(
+            f"cannot serve w{target_bits} storage at w{view_bits}: the "
+            f"precision gap must be a whole number of {PLANE_BITS}-bit "
+            "planes"
+        )
+    lo = drop // PLANE_BITS
+    if PLANE_BITS * lo >= target_bits:
+        raise ValueError(
+            f"plane_lo={lo} leaves no planes of a w{target_bits} weight"
+        )
+    return lo
+
+
+def truncate_policy_view(
+    params, tier: Union[str, QuantConfig], *, require_truncation: bool = False
+) -> Tuple[object, int]:
+    """`tier`-precision view of packed serving params: every PackedWeight
+    leaf stored above the tier's weight width gets ``plane_lo`` set so its
+    matmuls contract only the top planes. Returns ``(view, truncated)``.
+
+    The view is *zero-copy*: every array leaf (packed bytes, scales) is
+    identity-shared with the source params (``id(view.packed) ==
+    id(params.packed)``) — ``plane_lo`` is pytree aux data, so a view
+    costs one extra jit trace per tier, never a second weight copy. A
+    tier equal to the storage policy truncates nothing and returns
+    ``params`` itself (same object → the existing compiled trace is
+    reused). A tier is therefore a per-leaf *cap*: leaves already stored
+    at or below the tier width serve as stored.
+
+    Validation (a tier must be a pure plane-truncation of the served
+    storage policy): raises when the params carry no packed leaves (serve
+    with a quant policy first), when the precision gap of some leaf is
+    not a whole number of planes, or when the tier's activation precision
+    disagrees with a truncating leaf's — plane truncation only lowers
+    weight bits. With ``require_truncation`` (the speculative-draft
+    contract) a view that truncates no leaf is also an error."""
+    import jax
+
+    from repro.core.quantized_linear import PackedWeight
+
+    cfg = parse_tier_token(tier)
+    counts = {"packed": 0, "truncated": 0}
+
+    def view(leaf):
+        if not isinstance(leaf, PackedWeight):
+            return leaf
+        counts["packed"] += 1
+        lo = plane_offset(leaf.bits, cfg.w_bits)
+        if lo == 0:
+            return leaf
+        if leaf.a_bits != cfg.a_bits:
+            raise ValueError(
+                f"tier w{cfg.w_bits}a{cfg.a_bits} changes the "
+                f"activation precision of a w{leaf.bits}a{leaf.a_bits} "
+                "leaf; plane truncation only lowers weight bits — use "
+                f"a{leaf.a_bits} in the tier spec"
+            )
+        counts["truncated"] += 1
+        return dataclasses.replace(leaf, plane_lo=lo)
+
+    view_params = jax.tree_util.tree_map(
+        view, params, is_leaf=lambda l: isinstance(l, PackedWeight)
+    )
+    if not counts["packed"]:
+        raise ValueError(
+            "precision-tier views need bit-plane-packed weights: "
+            "serve with a quant policy (e.g. --quant w8a8) so the view "
+            "can truncate the resident planes"
+        )
+    if not counts["truncated"]:
+        if require_truncation:
+            raise ValueError(
+                f"draft policy w{cfg.w_bits} truncates no leaf: every "
+                "packed weight is already at or below the draft precision"
+            )
+        return params, 0
+    return view_params, counts["truncated"]

@@ -252,3 +252,27 @@ def quantize_params_for_serving(params, cfg, min_size: int = 1 << 16):
         return leaf
 
     return jax.tree_util.tree_map_with_path(maybe_pack, params)
+
+
+def packed_weight_bytes(params, w_bits: Optional[int] = None) -> int:
+    """Total packed GEMM weight bytes resident in `params`; with `w_bits`,
+    the bytes a plane-truncated view served at that width actually
+    streams per forward pass (top planes only — a w8 leaf read at w4
+    streams half its bytes, at w2 a quarter; leaves already at or below
+    `w_bits` stream whole). The modeled-traffic denominator for both the
+    speculative-decoding and precision-tier benchmarks."""
+    from repro.core.precision import PLANE_BITS, plane_offset
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda l: isinstance(l, PackedWeight)):
+        if not isinstance(leaf, PackedWeight):
+            continue
+        nbytes = int(leaf.packed.nbytes)
+        if leaf.packed8 is not None:
+            nbytes += int(leaf.packed8.nbytes)
+        if w_bits is not None:
+            lo = plane_offset(leaf.bits, w_bits)
+            nbytes = nbytes * (leaf.bits - PLANE_BITS * lo) // leaf.bits
+        total += nbytes
+    return total

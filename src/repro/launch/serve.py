@@ -54,6 +54,17 @@ subset to keep). Requires a quant policy (--quant/--policy) and the
 paged pool. Draft/acceptance counters are reported after a continuous
 run.
 
+Per-request precision tiers: --tiers "w8a8,w4a8,w2a8" assigns each
+synthetic request a quality–latency class round-robin, all served from
+the ONE packed weight set inside the same continuous batch — a tier is a
+plane-truncated view of the stored weights (w4 reads half the weight
+bytes of w8, w2 a quarter), and the scheduler runs one decode call per
+tier group per step. A request served at tier T is greedy bit-identical
+to a solo engine whose whole policy is T. Composes with --speculate (the
+draft must sit strictly below a slot's tier to speculate) and with the
+prefix cache (hashes are tier-scoped). Requires --continuous and a quant
+policy; per-tier counters are reported after the run.
+
 --plans FILE persists the kernel registry's block-plan cache (autotune
 winners, e.g. the paged-attention bh knob) across process restarts:
 loaded before serving if the file exists, written back on exit.
@@ -116,6 +127,13 @@ def main():
                     help="draft precision for --speculate: the plane "
                          "subset of the resident weights the draft "
                          "contracts (e.g. w4a8, w2a8)")
+    ap.add_argument("--tiers", default=None,
+                    help="per-request precision tiers, e.g. "
+                         "'w8a8,w4a8,w2a8': requests are assigned a tier "
+                         "round-robin and served through plane-truncated "
+                         "views of the one packed weight set inside the "
+                         "same continuous batch (needs --continuous and "
+                         "--quant/--policy)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common N-token system prompt to every "
                          "synthetic request (exercises the prefix cache)")
@@ -133,6 +151,12 @@ def main():
                          "scheduler; add --continuous")
     if args.speculate and not (args.quant or args.policy):
         raise SystemExit("--speculate drafts from the resident bit-plane "
+                         "weights; add a quant policy (e.g. --quant w8a8)")
+    if args.tiers and not args.continuous:
+        raise SystemExit("--tiers groups slots inside the continuous "
+                         "scheduler; add --continuous")
+    if args.tiers and not (args.quant or args.policy):
+        raise SystemExit("--tiers serves plane-truncated views of packed "
                          "weights; add a quant policy (e.g. --quant w8a8)")
     from repro.kernels import get_registry
 
@@ -192,7 +216,8 @@ def main():
                            chunked_prefill=args.chunked_prefill,
                            prefill_budget=args.prefill_budget,
                            speculate=args.speculate,
-                           draft_policy=args.draft_policy)
+                           draft_policy=args.draft_policy,
+                           tiers=args.tiers)
 
     def make_requests():
         # Self-contained stream: every call reproduces the exact same
@@ -200,12 +225,14 @@ def main():
         # pass serves precisely the stream the warmup pass compiled for.
         rng = np.random.default_rng(0)
         shared = rng.integers(0, cfg.vocab, args.shared_prefix)
+        tier_list = (args.tiers.split(",") if args.tiers else [None])
         reqs = [Request(rid=i,
                         prompt=np.concatenate([
                             shared, rng.integers(0, cfg.vocab, 8 + (i % 5))
                         ]).astype(np.int64),
                         max_new_tokens=args.max_new,
-                        temperature=0.0 if i % 2 == 0 else 0.7)
+                        temperature=0.0 if i % 2 == 0 else 0.7,
+                        tier=tier_list[i % len(tier_list)])
                 for i in range(args.requests)]
         if args.continuous and args.rate > 0:
             t = 0.0
@@ -264,7 +291,23 @@ def main():
                       f"{stats['spec_accepted_tokens']}/"
                       f"{stats['spec_draft_tokens']} drafts accepted "
                       f"({stats['spec_acceptance_rate']:.0%}) over "
-                      f"{stats['spec_rounds']} rounds")
+                      f"{stats['spec_rounds']} rounds, "
+                      f"{stats['spec_verify_rows']} rows in "
+                      f"{stats['spec_verify_calls']} verify calls")
+            if stats.get("tier_serving"):
+                print("  precision tiers:")
+                for name, tc in stats["tiers"].items():
+                    if not tc["requests"]:
+                        continue
+                    line = (f"    {name}: {tc['requests']} requests, "
+                            f"{tc['tokens']} tokens, "
+                            f"{tc['decode_calls']} decode calls")
+                    if tc["spec_draft_tokens"]:
+                        line += (f", {tc['spec_accepted_tokens']}/"
+                                 f"{tc['spec_draft_tokens']} drafts "
+                                 f"accepted "
+                                 f"({tc['spec_acceptance_rate']:.0%})")
+                    print(line)
         elif stats:
             print(f"  contiguous KV cache: "
                   f"{stats['resident_kv_bytes']/1e6:.2f} MB resident "

@@ -97,6 +97,13 @@ def build_model(cfg: ModelConfig) -> SimpleNamespace:
             lambda params, cache, batch:
             mod.prefill_chunk_logits(params, cfg, cache, batch)
         )
+        # Multi-row verify: a whole tier group's speculation windows in
+        # one dispatch (R = max_batch rows, dead rows masked by slot -1 /
+        # all--1 block tables). Same eligibility gate, same math per row.
+        ns.prefill_chunk_logits_multi = (
+            lambda params, cache, batch:
+            mod.prefill_chunk_logits_multi(params, cfg, cache, batch)
+        )
     return ns
 
 

@@ -652,6 +652,104 @@ def prefill_chunk_logits(params, cfg: ModelConfig, cache: DecodeCache, batch):
     return prefill_chunk(params, cfg, cache, batch, all_logits=True)
 
 
+def prefill_chunk_logits_multi(params, cfg: ModelConfig, cache: DecodeCache,
+                               batch):
+    """Batched speculative-verify: R independent chunk rows through ONE
+    call — :func:`prefill_chunk_logits` per row, stacked. The scheduler
+    verifies a whole tier group's speculation windows in one dispatch
+    instead of one call per slot (fixed ``R = max_batch`` rows keeps one
+    compiled signature per bucketed block count, exactly like the decode
+    step's fixed batch).
+
+    ``batch`` keys (all leading-R where the single-row call is scalar):
+      tokens (R, Lc)    right-padded chunk token ids per row
+      lengths (R,)      real chunk length per row (0 for dead rows)
+      starts (R,)       absolute position of each row's first chunk token
+      slots (R,)        each row's batch slot in `cache`; -1 marks a DEAD
+                        row (slot not verifying this call)
+      blocks (R, nbp)   each row's pool blocks; dead rows pass all -1
+
+    Dead rows are inert by construction: an all--1 block table routes
+    their K/V writes to the trash block (``paged_chunk_write`` remaps
+    invalid positions to block 0) and masks every attention key (the
+    kernel's online softmax over fully-masked blocks is a guarded no-op,
+    the reference zeroes the probabilities exactly), their ``pos``/
+    ``length`` entries are untouched (`slots` < 0 gates the update), and
+    their logits rows are garbage the caller ignores.
+
+    Rows are computed by an outer ``lax.scan`` carrying the pool planes:
+    each row attends only through its own block table (its own blocks
+    plus read-only shared prefix blocks) and writes only its own
+    destination blocks, so row order cannot change any row's math — each
+    row's logits are bitwise what its solo :func:`prefill_chunk_logits`
+    call would return. Returns ``(cache, logits (R, Lc, V))``."""
+    if cfg.attn_window:
+        raise ValueError("chunked prefill requires a full-attention "
+                         f"paged cache (attn_window={cfg.attn_window})")
+    from repro.kernels import ops
+
+    tokens = batch["tokens"]
+    R, Lc = tokens.shape
+    lengths = jnp.asarray(batch["lengths"], jnp.int32)
+    starts = jnp.asarray(batch["starts"], jnp.int32)
+    slots = jnp.asarray(batch["slots"], jnp.int32)
+    blocks = jnp.asarray(batch["blocks"], jnp.int32)
+    kv: PagedKVCache = cache.kv
+    quant = kv.quantized
+    L = cfg.num_layers
+
+    def row(carry, row_in):
+        pk_all, pv_all, ks_all, vs_all, pos, lng = carry
+        toks_r, len_r, start_r, slot_r, blocks_r = row_in
+        positions = (start_r + jnp.arange(Lc, dtype=jnp.int32))[None]
+        x = cm.embed_lookup(params["embed"], toks_r[None],
+                            scale=_embed_scale(cfg))
+        x = constrain(x, "batch", None, None)
+
+        def body(xc, layer_in):
+            block_p, pk, pv, ks, vs = layer_in
+            h = cm.apply_norm(xc, block_p["ln1"], cfg.norm)
+            q, k, v = _attention_qkv(block_p, cfg, h, positions)
+            attn, pk, pv, ks_new, vs_new = ops.paged_prefill(
+                q, k, v, pk, pv, blocks_r, start_r, len_r,
+                k_scale=ks if quant else None,
+                v_scale=vs if quant else None,
+                softcap=cfg.attn_logit_softcap,
+            )
+            xn, _ = _block_post_attn_seq(block_p, cfg, xc, attn)
+            if quant:
+                ks, vs = ks_new, vs_new
+            return xn, (pk, pv, ks, vs)
+
+        x, (pk_all, pv_all, ks_all, vs_all) = jax.lax.scan(
+            body, x, (params["blocks"], pk_all, pv_all, ks_all, vs_all)
+        )
+        hidden = cm.apply_norm(x, params["final_norm"], cfg.norm)
+        logits = compute_logits(params, cfg, hidden)
+        total = start_r + len_r
+        sc = jnp.maximum(slot_r, 0)      # .at[-1] would wrap — clamp + gate
+        live = slot_r >= 0
+        pos = pos.at[sc].set(jnp.where(live, total, pos[sc]))
+        lng = lng.at[sc].set(jnp.where(live, total, lng[sc]))
+        return (pk_all, pv_all, ks_all, vs_all, pos, lng), logits[0]
+
+    ks_in = kv.k_scale if quant else jnp.zeros((L, 0))
+    vs_in = kv.v_scale if quant else jnp.zeros((L, 0))
+    carry = (kv.k, kv.v, ks_in, vs_in, cache.pos, kv.length)
+    (k_new, v_new, ks_new, vs_new, pos, lng), logits = jax.lax.scan(
+        row, carry, (tokens, lengths, starts, slots, blocks)
+    )
+    new_cache = DecodeCache(
+        pos=pos,
+        kv=PagedKVCache(k=k_new, v=v_new, block_table=kv.block_table,
+                        length=lng,
+                        k_scale=ks_new if quant else None,
+                        v_scale=vs_new if quant else None,
+                        block_size=kv.block_size),
+    )
+    return new_cache, logits
+
+
 def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens: jax.Array,
                 paged_fused: bool = True,
                 gather_blocks: Optional[int] = None):

@@ -17,7 +17,11 @@ execution modes:
     the resident packed weights drafts k tokens per step and one
     chunk-shaped full-policy call verifies them (`repro.serving
     .speculative`), emitting the longest matching prefix — bitwise the
-    non-speculative greedy stream.
+    non-speculative greedy stream. With `tiers="w8a8,w4a8,w2a8"` each
+    request may name a precision tier (`Request.tier`) and is served
+    through a plane-truncated view of the same packed weights inside the
+    same continuous batch — greedy bit-identical to a solo engine whose
+    whole policy is that tier (`repro.serving.scheduler`).
   * `generate_static` — the classic static batch (batched prefill → decode
     loop, finished slots masked), kept as the baseline the serving
     benchmark measures continuous batching against. The decode loop exits
@@ -70,6 +74,7 @@ class ServingEngine:
         prefill_budget: int = 32,
         speculate: int = 0,
         draft_policy: Union[str, QuantConfig] = "w4a8",
+        tiers=None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -91,6 +96,7 @@ class ServingEngine:
         self.prefill_budget = prefill_budget
         self.speculate = speculate          # draft tokens/step (0 = off)
         self.draft_policy = draft_policy    # plane-truncation draft spec
+        self.tiers = tiers                  # per-request precision tiers
         self._sched: Optional[ContinuousScheduler] = None
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
@@ -130,6 +136,7 @@ class ServingEngine:
                 prefill_budget=self.prefill_budget,
                 speculate=self.speculate,
                 draft_policy=self.draft_policy,
+                tiers=self.tiers,
             )
         self._sched.on_token = self.on_token  # pick up late reassignment
         return self._sched

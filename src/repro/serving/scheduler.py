@@ -50,6 +50,16 @@ Design:
     (copy-on-write). Admission prefills only the uncached suffix
     (``prefill_suffix``) and is still greedy bit-identical to a cold
     request — bf16 and int8 pools, solo / static / mid-decode admission.
+  * Per-request precision tiers (paged archs, opt-in via ``tiers=``): a
+    request may name a "wXaY" quality–latency class and is then served
+    through a plane-truncated *view* of the one packed weight set
+    (``core.precision.truncate_policy_view`` — buffers shared by
+    identity, one extra jit trace per tier). ``step()`` groups live
+    slots by tier and runs one decode call per group with non-group
+    rows masked out of the pushed block table; a tier-T request in a
+    mixed batch is greedy bit-identical to a solo engine whose whole
+    policy is T. Speculation composes: the draft must truncate strictly
+    below the slot's tier, verify runs at the slot's tier.
   * Sampling: vectorized on-device greedy / temperature / top-k with
     per-slot parameters and per-request ``(seed, rid)``-derived PRNG
     streams (``repro.serving.sampling``).
@@ -72,7 +82,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.precision import PrecisionPolicy, as_policy
+from repro.core.precision import (
+    PrecisionPolicy,
+    as_policy,
+    parse_tier_specs,
+    parse_tier_token,
+    quant_token,
+    truncate_policy_view,
+)
 from repro.core.quant import QuantConfig
 from repro.core.quantized_linear import quantize_params_for_serving
 from repro.models import build_model
@@ -87,7 +104,11 @@ from repro.models.kv_cache import (
     set_paged_row,
 )
 from repro.serving import sampling
-from repro.serving.speculative import derive_draft_params, greedy_accept
+from repro.serving.speculative import (
+    derive_draft_params,
+    greedy_accept,
+    parse_draft_spec,
+)
 
 
 def _contig_headroom() -> int:
@@ -114,6 +135,12 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0                # 0 = no top-k filtering
     eos_id: Optional[int] = None
+    # Per-request precision tier: a "wXaY" token (or QuantConfig) naming
+    # one of the scheduler's configured `tiers`, served as a plane-
+    # truncated view of the one packed weight set. None = the storage
+    # policy. A request pinned to an unconfigured tier comes back failed
+    # (`error` set), like any other individually-rejected request.
+    tier: Union[None, str, QuantConfig] = None
     arrival_time: float = 0.0
     on_token: Optional[Callable[["Request", int], None]] = None
     out_tokens: Optional[List[int]] = None
@@ -167,6 +194,7 @@ class ContinuousScheduler:
         prefill_budget: int = 32,
         speculate: int = 0,
         draft_policy: Union[str, QuantConfig] = "w4a8",
+        tiers: Union[None, str, Tuple] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -273,7 +301,8 @@ class ContinuousScheduler:
                 raise ValueError("speculate must be >= 1 (0 disables)")
             can_spec = (
                 paged
-                and getattr(self.model, "prefill_chunk_logits", None) is not None
+                and getattr(self.model, "prefill_chunk_logits_multi",
+                            None) is not None
             )
             if not can_spec:
                 raise ValueError(
@@ -285,16 +314,51 @@ class ContinuousScheduler:
             # (serve with --quant) or the draft truncates nothing.
             self._draft_params, _ = derive_draft_params(self.params,
                                                         draft_policy)
-            self._verify = jax.jit(self.model.prefill_chunk_logits,
+            self._draft_cfg = parse_draft_spec(draft_policy)
+            # Verify is batched: one multi-row call per tier group per
+            # round (R = max_batch rows; non-verifying rows dead).
+            self._verify = jax.jit(self.model.prefill_chunk_logits_multi,
                                    donate_argnums=(1,))
-            self._set_positions = jax.jit(set_decode_positions,
-                                          donate_argnums=(0,))
         self.speculate = int(speculate)
         self.draft_policy = draft_policy
         self.spec_draft_tokens = 0
         self.spec_accepted_tokens = 0
         self.spec_rounds = 0
-        self.spec_verify_calls = 0     # one full-policy chunk per slot/round
+        self.spec_verify_calls = 0     # multi-row verify dispatches
+        self.spec_verify_rows = 0      # slots verified across those calls
+
+        # -- per-request precision tiers (plane-truncated policy views) --
+        # One packed weight set serves every configured tier: a tier view
+        # shares the packed/scale buffers by identity and differs only in
+        # pytree aux data (plane_lo), so each tier costs one extra jit
+        # trace of the decode/prefill paths — never a second weight copy.
+        # The key None is the base (storage-policy) tier.
+        tier_cfgs: Dict[str, QuantConfig] = {}
+        tier_views: Dict[Optional[str], object] = {None: self.params}
+        if tiers:
+            if not paged:
+                raise ValueError(
+                    f"{cfg.name}: per-request precision tiers need the "
+                    "paged KV cache (tier groups are isolated by masked "
+                    "block tables)"
+                )
+            for tcfg in parse_tier_specs(tiers):
+                key = quant_token(tcfg)
+                # Validates the tier is a pure plane-truncation of the
+                # storage policy (packed params, whole-plane gap,
+                # matching activation precision).
+                view, _ = truncate_policy_view(self.params, tcfg)
+                tier_cfgs[key] = tcfg
+                tier_views[key] = view
+        self._tier_cfgs = tier_cfgs
+        self._tier_views = tier_views
+        self.tiers = tuple(tier_cfgs)
+        self._slot_tier: List[Optional[str]] = [None] * max_batch
+        self.tier_counters: Dict[Optional[str], Dict[str, int]] = {
+            k: {"requests": 0, "tokens": 0, "decode_calls": 0,
+                "spec_draft_tokens": 0, "spec_accepted_tokens": 0}
+            for k in [None, *tier_cfgs]
+        }
 
         B = max_batch
         if paged:
@@ -332,6 +396,10 @@ class ContinuousScheduler:
                                            donate_argnums=(0,))
             self._set_row = jax.jit(set_paged_row, donate_argnums=(0,))
             self._cow = jax.jit(copy_pool_block, donate_argnums=(0,))
+            # One-write pos/length restore: speculation rollback and the
+            # position fix-up between per-tier decode group calls.
+            self._set_positions = jax.jit(set_decode_positions,
+                                          donate_argnums=(0,))
             self.prefix_hit_blocks = 0
             self.prefix_hit_tokens = 0
             self.prompt_tokens_seen = 0
@@ -412,9 +480,31 @@ class ContinuousScheduler:
     def _need_blocks(self, req: Request) -> int:
         return -(-self._need_tokens(req) // self.block_size)
 
+    def _tier_error(self, req: Request) -> Optional[str]:
+        """Validate + normalize `req.tier` into `req._tier_key` (the
+        canonical "wXaY" counter/view key; None = storage policy).
+        Non-None iff the tier can never be served here."""
+        if req.tier is None:
+            req._tier_key = None
+            return None
+        try:
+            key = quant_token(parse_tier_token(req.tier))
+        except ValueError as e:
+            return f"request {req.rid}: bad precision tier: {e}"
+        if key not in self._tier_views:
+            have = sorted(self._tier_cfgs) or "none configured"
+            return (f"request {req.rid}: unknown precision tier {key!r}; "
+                    f"scheduler tiers: {have} — pass tiers= / --tiers to "
+                    "serve this class")
+        req._tier_key = key
+        return None
+
     def _reject_reason(self, req: Request) -> Optional[str]:
         """Non-None iff the request can never be served by this scheduler
         (vs. transiently waiting for pool blocks)."""
+        err = self._tier_error(req)
+        if err is not None:
+            return err
         if self._capacity is None:
             return None
         need = self._need_tokens(req)
@@ -581,6 +671,7 @@ class ContinuousScheduler:
         writing, the block's first `len % block_size` slots are immutable
         and safe to share."""
         self._slots[b] = None
+        self._slot_tier[b] = None
         if not self.paged:
             return
         if self.prefix_cache:
@@ -596,15 +687,21 @@ class ContinuousScheduler:
 
     # -- prefix cache: hash index, matching, claiming, registration --------
 
-    def _hash_chunks(self, prompt) -> Tuple[List[bytes], Optional[bytes]]:
+    def _hash_chunks(
+        self, prompt, tier: Optional[str] = None
+    ) -> Tuple[List[bytes], Optional[bytes]]:
         """Chain-hashes of the prompt at block granularity: one digest per
         *full* block-sized token chunk (each digest covers every token up
         to and including its chunk, so a hit at chunk j implies the whole
         prefix matches) plus one for the trailing partial chunk, tagged so
-        a partial run never aliases a full block."""
+        a partial run never aliases a full block. The chain is seeded with
+        the request's precision tier: a tier-T prompt's hidden states —
+        and therefore its pool K/V bytes — differ from tier-T', so
+        cross-tier requests must never share blocks (tier-None seeds are
+        unchanged from the pre-tier format)."""
         toks = np.ascontiguousarray(np.asarray(prompt, np.int32))
         bs = self.block_size
-        full, h = [], b"m4bram-prefix"
+        full, h = [], b"m4bram-prefix" + (tier.encode() if tier else b"")
         for j in range(len(toks) // bs):
             h = hashlib.blake2b(h + toks[j * bs:(j + 1) * bs].tobytes(),
                                 digest_size=16).digest()
@@ -620,10 +717,12 @@ class ContinuousScheduler:
     def _req_hashes(self, req: Request) -> Tuple[List[bytes], Optional[bytes]]:
         """Chain hashes for `req`, memoized on the request object — the
         pool-full path re-checks the queue head every step, and the
-        digests depend only on (prompt, block_size)."""
+        digests depend only on (prompt, block_size, tier)."""
+        tier = getattr(req, "_tier_key", None)
         cached = getattr(req, "_prefix_hashes", None)
-        if cached is None or cached[0] != self.block_size:
-            cached = (self.block_size, self._hash_chunks(req.prompt))
+        if cached is None or cached[0] != (self.block_size, tier):
+            cached = ((self.block_size, tier),
+                      self._hash_chunks(req.prompt, tier))
             req._prefix_hashes = cached
         return cached[1]
 
@@ -785,6 +884,19 @@ class ContinuousScheduler:
             "spec_acceptance_rate":
                 (self.spec_accepted_tokens / self.spec_draft_tokens
                  if self.spec_draft_tokens else 0.0),
+            "spec_verify_calls": self.spec_verify_calls,
+            "spec_verify_rows": self.spec_verify_rows,
+            # -- per-request precision tiers --
+            "tier_serving": bool(self._tier_cfgs),
+            "tiers": {
+                (k or "base"): {
+                    **tc,
+                    "spec_acceptance_rate":
+                        (tc["spec_accepted_tokens"] / tc["spec_draft_tokens"]
+                         if tc["spec_draft_tokens"] else 0.0),
+                }
+                for k, tc in self.tier_counters.items()
+            },
         }
 
     def reset_pool_peak(self) -> None:
@@ -799,11 +911,22 @@ class ContinuousScheduler:
             req.out_tokens = []
         req.t_done = self._now()
 
+    def _claim_tier(self, req: Request, slot: int) -> Optional[str]:
+        """Record `req`'s (already validated) precision tier on the slot
+        it is being admitted into and count the admission. Every compute
+        call the slot makes — prefill, chunk, decode group, verify — then
+        uses the tier's plane-truncated params view."""
+        tier = getattr(req, "_tier_key", None)
+        self._slot_tier[slot] = tier
+        self.tier_counters[tier]["requests"] += 1
+        return tier
+
     def _admit(self, req: Request, slot: int, match=None) -> Optional[Request]:
         """Prefill `req` — solo cold, or suffix-only on a prefix-cache hit
         — and scatter its state into batch row `slot`. Returns the request
         if it finished on its very first token."""
         n = len(req.prompt)
+        tier = self._claim_tier(req, slot)
         if self.paged:
             hits, resident, revive, reserve, hashes = (
                 match if match is not None else self._match_prefix(req)
@@ -831,7 +954,7 @@ class ContinuousScheduler:
             tokens = np.zeros((1, L), np.int32)
             tokens[0, :n] = req.prompt  # right-pad; real length via `lengths`
             solo, logits = self._prefill_fn(L)(
-                self.params,
+                self._tier_views[tier],
                 {"tokens": jnp.asarray(tokens),
                  "lengths": jnp.asarray([n], jnp.int32)},
             )
@@ -917,7 +1040,8 @@ class ContinuousScheduler:
         if kv.quantized:
             batch["pool_k_scale"] = kv.k_scale
             batch["pool_v_scale"] = kv.v_scale
-        solo, logits = self._suffix_fn(Ls)(self.params, batch)
+        solo, logits = self._suffix_fn(Ls)(
+            self._tier_views[self._slot_tier[slot]], batch)
         if resident < n:
             # Below a full-prompt hit only whole blocks are shared, so the
             # suffix starts exactly at the block boundary `resident`.
@@ -942,6 +1066,7 @@ class ContinuousScheduler:
         and out of sampling, and its prompt blocks stay unregistered in
         the prefix index (their bytes don't exist yet)."""
         n = len(req.prompt)
+        self._claim_tier(req, slot)
         hits, resident, revive, reserve, hashes = match
         self.prompt_tokens_seen += n
         self.prefix_hit_blocks += len(hits)
@@ -995,7 +1120,8 @@ class ContinuousScheduler:
             "slot": jnp.asarray(slot, jnp.int32),
             "blocks": jnp.asarray(self._block_tab[slot, :nbp]),
         }
-        self.cache, logits = self._chunk(self.params, self.cache, batch)
+        self.cache, logits = self._chunk(
+            self._tier_views[self._slot_tier[slot]], self.cache, batch)
         self.prefill_chunks_run += 1
         self.prefill_chunk_tokens += t
         self.prefill_tokens_computed += Lc
@@ -1017,6 +1143,7 @@ class ContinuousScheduler:
 
     def _emit(self, req: Request, tok: int) -> None:
         self.tokens_emitted += 1
+        self.tier_counters[getattr(req, "_tier_key", None)]["tokens"] += 1
         if req.on_token is not None:
             req.on_token(req, tok)
         if self.on_token is not None:
@@ -1059,6 +1186,15 @@ class ContinuousScheduler:
                 continue
             if req.temperature > 0:
                 continue
+            tier = self._slot_tier[b]
+            if (tier is not None
+                    and self._tier_cfgs[tier].w_bits
+                    <= self._draft_cfg.w_bits):
+                # Speculation composes with tiers only when the draft
+                # truncates strictly below the slot's tier — a w2 slot
+                # has nothing cheaper than itself to draft with, so it
+                # just decodes normally.
+                continue
             k_eff = min(self.speculate,
                         req.max_new_tokens - len(req.out_tokens) - 1)
             if k_eff >= 1:
@@ -1100,49 +1236,74 @@ class ContinuousScheduler:
         # argmax is the token sequential greedy decode would emit there.
         finished: List[Request] = []
         Lc = self.speculate + 1
+        R = self.max_batch
         gran = max(self.bucket // self.block_size, 1)
-        for b, k_eff in spec.items():
-            req = self._slots[b]
-            p = int(self._pos_host[b])
-            t = k_eff + 1
-            tokens = np.zeros((1, Lc), np.int32)
-            tokens[0, 0] = self._cur[b, 0]
-            tokens[0, 1:t] = drafts[b]
-            covering = -(-(p + t) // self.block_size)
+        vgroups: Dict[Optional[str], List[int]] = {}
+        for b in spec:
+            vgroups.setdefault(self._slot_tier[b], []).append(b)
+        for tkey in sorted(vgroups, key=lambda k: (k is not None, k or "")):
+            slots_g = vgroups[tkey]
+            # One bucketed block-table width for the whole group: extra
+            # -1 entries on shorter rows are dead (masked exactly), so
+            # the widest row sets the compiled signature.
+            covering = max(
+                -(-(int(self._pos_host[b]) + spec[b] + 1) // self.block_size)
+                for b in slots_g)
             nbp = min(self._max_blocks,
                       max(gran, -(-covering // gran) * gran))
+            tokens = np.zeros((R, Lc), np.int32)
+            lengths = np.zeros((R,), np.int32)
+            starts = np.zeros((R,), np.int32)
+            slot_ids = np.full((R,), -1, np.int32)
+            btab = np.full((R, nbp), -1, np.int32)
+            for b in slots_g:
+                t = spec[b] + 1
+                tokens[b, 0] = self._cur[b, 0]
+                tokens[b, 1:t] = drafts[b]
+                lengths[b] = t
+                starts[b] = int(self._pos_host[b])
+                slot_ids[b] = b
+                btab[b] = self._block_tab[b, :nbp]
             batch = {
                 "tokens": jnp.asarray(tokens),
-                "lengths": jnp.asarray([t], jnp.int32),
-                "start": jnp.asarray(p, jnp.int32),
-                "slot": jnp.asarray(b, jnp.int32),
-                "blocks": jnp.asarray(self._block_tab[b, :nbp]),
+                "lengths": jnp.asarray(lengths),
+                "starts": jnp.asarray(starts),
+                "slots": jnp.asarray(slot_ids),
+                "blocks": jnp.asarray(btab),
             }
-            self.cache, logits = self._verify(self.params, self.cache, batch)
+            self.cache, logits = self._verify(self._tier_views[tkey],
+                                              self.cache, batch)
             self.spec_verify_calls += 1
-            verify_toks = np.asarray(jnp.argmax(
-                logits[0, :t, :].astype(jnp.float32), axis=-1))
-            emitted = greedy_accept(verify_toks, drafts[b])
-            self.spec_draft_tokens += k_eff
-            self.spec_accepted_tokens += len(emitted) - 1
-            req.spec_drafted += k_eff
-            req.spec_accepted += len(emitted) - 1
-            m = 0
-            done = False
-            for tok in emitted:
-                req.out_tokens.append(tok)
-                self._emit(req, tok)
-                m += 1
-                if self._finished(req, tok):
-                    done = True
-                    break
-            self._pos_host[b] = p + m
-            self._steps[b] += m
-            if done:
-                self._release_slot(b)
-                finished.append(req)
-            else:
-                self._cur[b, 0] = emitted[m - 1]
+            self.spec_verify_rows += len(slots_g)
+            lg = np.asarray(jnp.argmax(logits.astype(jnp.float32), axis=-1))
+            tc = self.tier_counters[tkey]
+            for b in slots_g:
+                k_eff = spec[b]
+                req = self._slots[b]
+                p = int(self._pos_host[b])
+                emitted = greedy_accept(lg[b, :k_eff + 1], drafts[b])
+                self.spec_draft_tokens += k_eff
+                self.spec_accepted_tokens += len(emitted) - 1
+                tc["spec_draft_tokens"] += k_eff
+                tc["spec_accepted_tokens"] += len(emitted) - 1
+                req.spec_drafted += k_eff
+                req.spec_accepted += len(emitted) - 1
+                m = 0
+                done = False
+                for tok in emitted:
+                    req.out_tokens.append(tok)
+                    self._emit(req, tok)
+                    m += 1
+                    if self._finished(req, tok):
+                        done = True
+                        break
+                self._pos_host[b] = p + m
+                self._steps[b] += m
+                if done:
+                    self._release_slot(b)
+                    finished.append(req)
+                else:
+                    self._cur[b, 0] = emitted[m - 1]
         # Roll every row back to its accepted frontier in one device
         # write. Clobbering non-speculating rows is safe: chunk plans
         # drive the chunk kernel with explicit start/length operands (the
@@ -1154,6 +1315,47 @@ class ContinuousScheduler:
         self._table_dirty = True       # real table re-pushed before decode
         self.spec_rounds += 1
         return finished
+
+    def _decode_tier_groups(self, groups) -> jnp.ndarray:
+        """Mixed-tier batched decode: one decode call per tier group, each
+        with that group's truncated-plane view params and a block table
+        masking every non-group row to -1 (writes route to the trash
+        block, attention sees no keys — :meth:`_push_spec_table`, reused
+        verbatim from the speculation machinery). Per-token activation
+        scales make row b's logits independent of the other rows' content,
+        so a group call computes exactly what a solo tier-T engine's
+        decode computes for those rows — the tier bit-identity contract.
+
+        Each jitted decode call advances EVERY row's device pos/length by
+        one, so with G group calls the naive result would be +G. Between
+        calls positions are reset to the pre-decode frontier and after the
+        last call set to frontier+1 for all rows — precisely the state one
+        single-call decode leaves behind (one metadata write each, same
+        :func:`set_decode_positions` the speculation rollback uses).
+
+        Returns the (B, V) last-position logits matrix with each row taken
+        from its own group's call, ready for the shared sampling path."""
+        pos0 = np.asarray(self._pos_host, np.int32).copy()
+        cur = jnp.asarray(self._cur)
+        out = None
+        order = sorted(groups, key=lambda k: (k is not None, k or ""))
+        for i, key in enumerate(order):
+            if i:
+                p = jnp.asarray(pos0)
+                self.cache = self._set_positions(self.cache, p, p)
+            self._push_spec_table(set(groups[key]))
+            self.cache, logits = self._decode(self._tier_views[key],
+                                              self.cache, cur)
+            self.tier_counters[key]["decode_calls"] += 1
+            rows = np.asarray(logits[:, -1, :])
+            if out is None:
+                out = np.zeros_like(rows)
+            for b in groups[key]:
+                out[b] = rows[b]
+        p1 = jnp.asarray(pos0 + 1)
+        self.cache = self._set_positions(self.cache, p1, p1)
+        self._table_dirty = True       # real table re-pushed next step
+        return jnp.asarray(out)
 
     # -- the decode loop ----------------------------------------------------
 
@@ -1247,10 +1449,25 @@ class ContinuousScheduler:
         if self.paged:
             self._alloc_boundary_blocks()
             self._sync_table()
-        self.cache, logits = self._decode(self.params, self.cache,
-                                          jnp.asarray(self._cur))
+        groups: Dict[Optional[str], List[int]] = {}
+        for b, r in enumerate(self._slots):
+            if r is not None and b not in self._chunk_plans:
+                groups.setdefault(self._slot_tier[b], []).append(b)
+        if len(groups) <= 1:
+            # Homogeneous batch (incl. the no-tiers engine): one decode
+            # with the group's view params — exactly what a solo engine
+            # whose whole policy is this tier runs, so bit-identity for
+            # the single-tier case holds by construction.
+            key = next(iter(groups), None)
+            self.cache, logits = self._decode(self._tier_views[key],
+                                              self.cache,
+                                              jnp.asarray(self._cur))
+            self.tier_counters[key]["decode_calls"] += 1
+            last = logits[:, -1, :]
+        else:
+            last = self._decode_tier_groups(groups)
         toks = np.asarray(sampling.sample_tokens(
-            logits[:, -1, :], self._temps, self._top_ks,
+            last, self._temps, self._top_ks,
             self._keys, self._steps,
         ))
         self._steps += 1

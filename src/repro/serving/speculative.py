@@ -8,10 +8,14 @@ weights is a w4/w2 forward pass with zero extra weight memory. This
 module is the policy half of that subsystem:
 
   * :func:`derive_draft_params` — turn the serving params into a draft
-    view by setting ``plane_lo`` on every packed leaf. The view is
-    *pure*: leaves (packed bytes, scales) are identity-shared with the
-    target params; only pytree aux data changes, so the draft forward
-    pass is one extra jit trace, never a second weight copy.
+    view by setting ``plane_lo`` on every packed leaf. Since PR 8 this
+    is a thin wrapper over :func:`repro.core.precision
+    .truncate_policy_view` — the *same* leaf-walk that builds per-request
+    serving-tier views, so draft views and tier views are provably the
+    same code path. The view is *pure*: leaves (packed bytes, scales)
+    are identity-shared with the target params; only pytree aux data
+    changes, so the draft forward pass is one extra jit trace, never a
+    second weight copy.
   * :func:`greedy_accept` — the acceptance rule. Every emitted token is
     a full-policy verify argmax (the draft only decides *how many* of
     them land per step), which is why greedy speculation is bitwise
@@ -19,10 +23,14 @@ module is the policy half of that subsystem:
 
 The scheduling half lives in ``ContinuousScheduler.step()``: draft k
 tokens per eligible slot with the view params (speculative K/V appended
-into the row's own pool blocks), then verify all k+1 positions in one
-chunk-shaped full-policy call (``prefill_chunk_logits``) whose K/V
-writes overwrite the draft's, and roll back positions/lengths for the
-rejected tail (:func:`repro.models.kv_cache.set_decode_positions`).
+into the row's own pool blocks), then verify each tier group's
+``[current token, drafts]`` windows in one multi-row full-tier call
+(``prefill_chunk_logits_multi``) whose K/V writes overwrite the draft's,
+and roll back positions/lengths for the rejected tail
+(:func:`repro.models.kv_cache.set_decode_positions`). When requests
+carry precision tiers, the draft must truncate strictly *below* each
+slot's tier and verification runs at the slot's tier, not the storage
+policy — composition the scheduler enforces per slot.
 
 Plane math (see ``kernels/bitplane_matmul.py`` for the derivation): a
 w8 leaf served at w4 drops ``lo = (8-4)/2 = 2`` planes, at w2 drops 3;
@@ -32,51 +40,23 @@ latency story ``benchmarks/spec_bench.py`` models.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Sequence, Tuple, Union
 
-import jax
-
-from repro.core.precision import parse_quant_token
+from repro.core.precision import (  # noqa: F401  (re-exported: bench/tests)
+    PLANE_BITS,
+    parse_tier_token,
+    plane_offset,
+    truncate_policy_view,
+)
 from repro.core.quant import QuantConfig
-from repro.core.quantized_linear import PackedWeight
-
-PLANE_BITS = 2
 
 
 def parse_draft_spec(spec: Union[str, QuantConfig]) -> QuantConfig:
     """Normalize a ``--draft-policy`` value ("w2a8" / "w4a8" or an
     already-built QuantConfig). Drafts are pure plane truncations, so the
-    Table-III mixed-group ratio ("rZZ") has no meaning here."""
-    cfg = spec if isinstance(spec, QuantConfig) else parse_quant_token(str(spec))
-    if cfg.mixed_ratio_8b:
-        raise ValueError(
-            "draft policy is a plane truncation of the resident weights; "
-            f"a mixed 8-bit filter group ({spec!r}) cannot be expressed "
-            "as a plane subset"
-        )
-    return cfg
-
-
-def plane_offset(target_bits: int, draft_bits: int) -> int:
-    """Number of low 2-bit planes to drop so `target_bits` storage serves
-    a `draft_bits` contraction. 0 when the leaf is already at or below the
-    draft precision (nothing to truncate — the draft just runs it as-is)."""
-    if draft_bits >= target_bits:
-        return 0
-    drop = target_bits - draft_bits
-    if drop % PLANE_BITS:
-        raise ValueError(
-            f"cannot serve w{target_bits} storage at w{draft_bits}: the "
-            f"precision gap must be a whole number of {PLANE_BITS}-bit "
-            "planes"
-        )
-    lo = drop // PLANE_BITS
-    if PLANE_BITS * lo >= target_bits:
-        raise ValueError(
-            f"plane_lo={lo} leaves no planes of a w{target_bits} weight"
-        )
-    return lo
+    Table-III mixed-group ratio ("rZZ") has no meaning here — same rule
+    as serving tiers (:func:`repro.core.precision.parse_tier_token`)."""
+    return parse_tier_token(spec)
 
 
 def derive_draft_params(params, draft: Union[str, QuantConfig]) -> Tuple[object, int]:
@@ -89,41 +69,8 @@ def derive_draft_params(params, draft: Union[str, QuantConfig]) -> Tuple[object,
     the point of the whole exercise. Raises if the params carry no packed
     leaves (serve with a quant policy first) or if the draft spec doesn't
     truncate anything (target already at or below draft precision)."""
-    cfg = parse_draft_spec(draft)
-    counts = {"packed": 0, "truncated": 0}
-
-    def view(leaf):
-        if not isinstance(leaf, PackedWeight):
-            return leaf
-        counts["packed"] += 1
-        lo = plane_offset(leaf.bits, cfg.w_bits)
-        if lo == 0:
-            return leaf
-        if leaf.a_bits != cfg.a_bits:
-            raise ValueError(
-                f"draft policy w{cfg.w_bits}a{cfg.a_bits} changes the "
-                f"activation precision of a w{leaf.bits}a{leaf.a_bits} "
-                "leaf; plane truncation only lowers weight bits — use "
-                f"a{leaf.a_bits} in the draft spec"
-            )
-        counts["truncated"] += 1
-        return dataclasses.replace(leaf, plane_lo=lo)
-
-    draft_params = jax.tree_util.tree_map(
-        view, params, is_leaf=lambda l: isinstance(l, PackedWeight)
-    )
-    if not counts["packed"]:
-        raise ValueError(
-            "self-speculative decoding needs bit-plane-packed weights: "
-            "serve with a quant policy (e.g. --quant w8a8) so the draft "
-            "can truncate the resident planes"
-        )
-    if not counts["truncated"]:
-        raise ValueError(
-            f"draft policy w{cfg.w_bits} truncates no leaf: every packed "
-            "weight is already at or below the draft precision"
-        )
-    return draft_params, counts["truncated"]
+    return truncate_policy_view(params, parse_draft_spec(draft),
+                                require_truncation=True)
 
 
 def greedy_accept(

@@ -24,6 +24,7 @@ from repro.core.quantized_linear import (
 W4A8 = QuantConfig(w_bits=4, a_bits=8)
 W8A8 = QuantConfig(w_bits=8, a_bits=8)
 W2A4 = QuantConfig(w_bits=2, a_bits=4)
+W2A8 = QuantConfig(w_bits=2, a_bits=8)
 
 
 def test_uniform_policy_matches_everything():
@@ -174,3 +175,113 @@ def test_policy_from_dse_smoke():
         assert rule.cfg.a_bits == 8
     # Unknown layers fall back to the conservative default.
     assert pol.for_path("unseen_layer").w_bits == 8
+
+
+def test_policy_from_dse_unprotected_boundaries():
+    """protect_boundary=False lets the DSE pick even the first/last
+    layers' precision on cycles alone — every rule is still a supported
+    width and anchors exactly one layer name."""
+    fpga = sim.Fpga("toy", 128, 256)
+    cim = sim.M4BRAM_S_DP
+    pol = policy_from_dse(_small_net(), fpga, cim, a_bits=8,
+                          protect_boundary=False)
+    assert len(pol.rules) == 3
+    for rule, layer in zip(pol.rules, _small_net()):
+        assert rule.matches(layer.name)
+        assert rule.cfg.w_bits in (2, 4, 8)
+    # A name that merely *contains* a layer name must not match its
+    # anchored rule ("l0_extra" vs "(^|/)l0$") — it falls to the default.
+    assert pol.for_path("l0_extra") == pol.default
+
+
+def test_policy_from_dse_single_candidate():
+    """With one candidate width there is nothing to choose: every layer
+    lands on it (boundary protection can't pin 8-bit that isn't
+    offered)."""
+    fpga = sim.Fpga("toy", 128, 256)
+    cim = sim.M4BRAM_S_DP
+    pol = policy_from_dse(_small_net(), fpga, cim, a_bits=8,
+                          w_candidates=(4,))
+    for layer in _small_net():
+        assert pol.for_path(layer.name).w_bits == 4
+
+
+def test_overlapping_rules_first_match_wins_over_specificity():
+    """Rule order is the ONLY precedence: an earlier broad pattern beats
+    a later more-specific one on paths both match."""
+    pol = parse_policy_spec("w4a8;wo=w8a8;blocks/wo=w2a4")
+    # both rules match "blocks/wo"; the first listed wins
+    assert pol.for_path("blocks/wo") == W8A8
+    # the specific rule still exists for paths only it matches? No —
+    # "wo" (unanchored) matches every path containing "wo", so the
+    # second rule is fully shadowed. Reversing the order un-shadows it.
+    rev = parse_policy_spec("w4a8;blocks/wo=w2a4;wo=w8a8")
+    assert rev.for_path("blocks/wo") == W2A4
+    assert rev.for_path("attn/wo") == W8A8
+
+
+# -- precision tiers: spec parsing + view validation ----------------------
+
+
+def test_parse_tier_specs_roundtrip():
+    from repro.core.precision import parse_tier_specs, quant_token
+
+    tiers = parse_tier_specs("w8a8, w4a8,w2a8")
+    assert [quant_token(t) for t in tiers] == ["w8a8", "w4a8", "w2a8"]
+    # Sequence form (tokens or QuantConfigs) parses identically.
+    assert parse_tier_specs(["w8a8", W4A8]) == (W8A8, W4A8)
+
+
+def test_parse_tier_specs_rejects_mixed_ratio_and_duplicates():
+    from repro.core.precision import parse_tier_specs
+
+    # Table-III "rZZ" re-assigns CHANNELS to 8-bit; a tier is a PLANE
+    # subset of the resident codes — the two are incompatible.
+    with pytest.raises(ValueError, match="plane subset"):
+        parse_tier_specs("w8a8,w4a8r10")
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_tier_specs(["w4a8", W4A8])
+    with pytest.raises(ValueError, match="empty"):
+        parse_tier_specs("")
+
+
+def test_truncate_view_rejects_activation_mismatch():
+    """A tier may only lower WEIGHT bits of a packed leaf: serving w8a8
+    storage at w4a4 would need requantized activations, not a plane
+    subset — the error must say so clearly."""
+    from repro.core.precision import truncate_policy_view
+
+    rng = np.random.default_rng(3)
+    params = {"w": quantize_params_for_serving(
+        {"w": jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)},
+        W8A8, min_size=1024)["w"]}
+    with pytest.raises(ValueError, match="activation precision"):
+        truncate_policy_view(params, "w4a4")
+    # matching a_bits: fine, truncates one leaf
+    view, n = truncate_policy_view(params, "w4a8")
+    assert n == 1 and view["w"].plane_lo == 2
+
+
+def test_truncate_view_requires_packed_leaves():
+    from repro.core.precision import truncate_policy_view
+
+    with pytest.raises(ValueError, match="quant policy"):
+        truncate_policy_view({"w": jnp.ones((8, 8))}, "w4a8")
+
+
+def test_truncate_view_is_per_leaf_cap():
+    """Mixed per-layer storage under one tier: leaves above the tier
+    truncate, leaves already at/below it serve as stored (plane_lo=0) —
+    and a whole-plane gap is enforced per leaf."""
+    from repro.core.precision import truncate_policy_view
+
+    rng = np.random.default_rng(4)
+    raw = {k: jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+           for k in ("hi", "lo")}
+    pol = PrecisionPolicy(default=W8A8, rules=(LayerRule(r"(^|/)lo$", W2A8),))
+    params = quantize_params_for_serving(raw, pol, min_size=1024)
+    view, n = truncate_policy_view(params, "w4a8")
+    assert n == 1
+    assert view["hi"].plane_lo == 2        # w8 capped to w4
+    assert view["lo"].plane_lo == 0        # already below the cap
+    assert view["lo"] is params["lo"]      # untouched leaf, same object

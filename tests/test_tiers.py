@@ -1,0 +1,274 @@
+"""Per-request precision tiers: one packed weight set serving w8/w4/w2
+quality–latency classes inside a single continuous batch.
+
+The contract has three layers:
+
+  * a tier is a *view*: ``truncate_policy_view`` shares every packed /
+    scale buffer with the storage params by identity (a tier equal to the
+    storage policy returns the params object itself), so N tiers cost N
+    jit traces and zero extra weight bytes;
+  * a tier is *isolated*: a request served at tier T inside a mixed-tier
+    continuous batch is greedy bit-identical to a solo engine whose whole
+    policy is T — across bf16/int8 pools, mid-decode admission, warm
+    prefixes, and speculation (tier groups decode through masked block
+    tables; prefix hashes are tier-scoped);
+  * a tier *composes* with speculation: the draft must truncate strictly
+    below a slot's tier (a w2 slot has nothing cheaper to draft with) and
+    verification runs at the slot's tier, batched per tier group.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.precision import (
+    parse_tier_specs,
+    truncate_policy_view,
+)
+from repro.core.quant import QuantConfig
+from repro.core.quantized_linear import PackedWeight, quantize_params_for_serving
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Request
+
+KEY = jax.random.PRNGKey(0)
+BS = 4
+Q8 = QuantConfig(w_bits=8, a_bits=8)
+PROMPT_A = np.zeros(8, np.int64)
+PROMPT_B = (np.arange(11) * 5 + 2) % 64   # non-divisor of block/bucket
+PROMPT_C = (np.arange(7) * 3 + 1) % 64
+TIERS = "w8a8,w4a8,w2a8"
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _sched(cfg, params, tiers=TIERS, max_batch=3, **kw):
+    kw.setdefault("max_ctx", 64)
+    kw.setdefault("quant", Q8)
+    return ContinuousScheduler(cfg, params, max_batch=max_batch, bucket=16,
+                               paged=True, block_size=BS,
+                               chunked_prefill=True, prefill_budget=8,
+                               tiers=tiers, **kw)
+
+
+def _drain(sched):
+    out = []
+    while sched.num_active or sched.num_waiting:
+        out.extend(sched.step())
+    return out
+
+
+def _streams(done):
+    return {r.rid: r.out_tokens for r in done}
+
+
+def _solo(cfg, params, rid, prompt, n, tier, **kw):
+    sched = _sched(cfg, params, tiers=tier, **kw)
+    sched.submit(Request(rid, prompt, max_new_tokens=n, tier=tier))
+    return _streams(_drain(sched))[rid]
+
+
+# -- the view: zero-copy, identity-shared buffers -------------------------
+
+
+def test_tier_view_shares_buffers_by_identity(olmo):
+    cfg, params = olmo
+    qp = quantize_params_for_serving(params, Q8, min_size=1024)
+    view, truncated = truncate_policy_view(qp, "w4a8")
+    assert truncated > 0
+    src = {
+        jax.tree_util.keystr(p): l
+        for p, l in jax.tree_util.tree_leaves_with_path(
+            qp, is_leaf=lambda l: isinstance(l, PackedWeight))
+        if isinstance(l, PackedWeight)
+    }
+    assert src
+    for path, leaf in jax.tree_util.tree_leaves_with_path(
+            view, is_leaf=lambda l: isinstance(l, PackedWeight)):
+        if not isinstance(leaf, PackedWeight):
+            continue
+        orig = src[jax.tree_util.keystr(path)]
+        assert leaf.packed is orig.packed      # zero-copy: same buffer
+        assert leaf.scale is orig.scale
+        assert leaf.plane_lo == 2              # w8 served at w4
+
+    # A tier equal to the storage policy is the params object itself —
+    # same pytree, same compiled trace.
+    same, n = truncate_policy_view(qp, "w8a8")
+    assert same is qp and n == 0
+
+
+def test_scheduler_tier_views_share_storage(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    base_packed = [l.packed for l in jax.tree_util.tree_leaves(
+        sched.params, is_leaf=lambda l: isinstance(l, PackedWeight))
+        if isinstance(l, PackedWeight)]
+    assert sched._tier_views["w8a8"] is sched.params
+    for key in ("w4a8", "w2a8"):
+        tier_packed = [l.packed for l in jax.tree_util.tree_leaves(
+            sched._tier_views[key],
+            is_leaf=lambda l: isinstance(l, PackedWeight))
+            if isinstance(l, PackedWeight)]
+        assert all(a is b for a, b in zip(base_packed, tier_packed))
+
+
+# -- isolation: mixed-tier == solo, bitwise -------------------------------
+
+
+@pytest.mark.parametrize("kv_int8", [False, True])
+def test_mixed_batch_bit_identical_to_solo(olmo, kv_int8):
+    """Three requests at three tiers in one continuous batch: each token
+    stream equals the solo engine pinned to that request's tier — bf16
+    and int8 pools."""
+    cfg, params = olmo
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_quant=True)
+    jobs = [(1, PROMPT_A, "w8a8"), (2, PROMPT_B, "w4a8"),
+            (3, PROMPT_C, "w2a8")]
+    sched = _sched(cfg, params)
+    for rid, prompt, tier in jobs:
+        sched.submit(Request(rid, prompt, max_new_tokens=10, tier=tier))
+    mixed = _streams(_drain(sched))
+    for rid, prompt, tier in jobs:
+        assert mixed[rid] == _solo(cfg, params, rid, prompt, 10, tier)
+    st = sched.pool_stats()
+    assert st["tier_serving"]
+    for tier in ("w8a8", "w4a8", "w2a8"):
+        tc = st["tiers"][tier]
+        assert tc["requests"] == 1
+        assert tc["tokens"] == 10
+        assert tc["decode_calls"] > 0
+
+
+def test_bit_identity_mid_decode_admission(olmo):
+    """A w2 request admitted while a w8 slot is deep into its decode:
+    both streams match their solo-tier runs, and the late admission never
+    perturbs the live slot."""
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    sched.submit(Request(1, PROMPT_A, max_new_tokens=14, tier="w8a8"))
+    done = []
+    for _ in range(5):
+        done.extend(sched.step())
+    sched.submit(Request(2, PROMPT_B, max_new_tokens=8, tier="w2a8"))
+    done.extend(_drain(sched))
+    mixed = _streams(done)
+    assert mixed[1] == _solo(cfg, params, 1, PROMPT_A, 14, "w8a8")
+    assert mixed[2] == _solo(cfg, params, 2, PROMPT_B, 8, "w2a8")
+
+
+def test_prefix_cache_is_tier_scoped(olmo):
+    """Same-tier followers reuse resident prompt blocks; a cross-tier
+    follower of the same prompt must NOT (its K/V was computed at a
+    different weight precision) — and still decodes bit-identically to
+    its solo engine."""
+    cfg, params = olmo
+    prompt = np.concatenate([PROMPT_B, PROMPT_C])
+
+    sched = _sched(cfg, params)
+    sched.submit(Request(1, prompt, max_new_tokens=4, tier="w4a8"))
+    _drain(sched)
+    hits0 = sched.pool_stats()["prefix_hit_tokens"]
+
+    sched.submit(Request(2, prompt, max_new_tokens=4, tier="w4a8"))
+    same = _streams(_drain(sched))
+    hits_same = sched.pool_stats()["prefix_hit_tokens"] - hits0
+    assert hits_same > 0                   # same tier: blocks reused
+
+    sched.submit(Request(3, prompt, max_new_tokens=4, tier="w2a8"))
+    cross = _streams(_drain(sched))
+    hits_cross = (sched.pool_stats()["prefix_hit_tokens"]
+                  - hits0 - hits_same)
+    assert hits_cross == 0                 # cross tier: no poisoning
+    assert same[2] == _solo(cfg, params, 2, prompt, 4, "w4a8")
+    assert cross[3] == _solo(cfg, params, 3, prompt, 4, "w2a8")
+
+
+# -- composition with speculation -----------------------------------------
+
+
+def test_speculation_composes_with_tiers(olmo):
+    """w2 draft under a mixed batch: w8/w4 slots speculate, the w2 slot
+    (nothing cheaper than itself) decodes normally — and every stream is
+    bitwise the non-speculative mixed run."""
+    cfg, params = olmo
+    jobs = [(1, PROMPT_A, "w8a8"), (2, PROMPT_B, "w4a8"),
+            (3, PROMPT_C, "w2a8")]
+
+    def serve(k):
+        sched = _sched(cfg, params, speculate=k, draft_policy="w2a8")
+        for rid, prompt, tier in jobs:
+            sched.submit(Request(rid, prompt, max_new_tokens=12, tier=tier))
+        return _streams(_drain(sched)), sched
+
+    spec, sched = serve(3)
+    plain, _ = serve(0)
+    assert spec == plain
+    st = sched.pool_stats()
+    assert st["tiers"]["w8a8"]["spec_draft_tokens"] > 0
+    assert st["tiers"]["w4a8"]["spec_draft_tokens"] > 0
+    assert st["tiers"]["w2a8"]["spec_draft_tokens"] == 0   # never eligible
+    assert st["spec_verify_rows"] >= st["spec_verify_calls"] > 0
+
+
+def test_same_tier_verify_rows_batch_into_one_call(olmo):
+    """Two co-speculating same-tier slots verify in one multi-row call
+    per round: rows outnumber dispatches."""
+    cfg, params = olmo
+    sched = _sched(cfg, params, tiers="w8a8", max_batch=2,
+                   speculate=2, draft_policy="w2a8")
+    sched.submit(Request(1, PROMPT_A, max_new_tokens=20, tier="w8a8"))
+    sched.submit(Request(2, PROMPT_A + 1, max_new_tokens=20, tier="w8a8"))
+    _drain(sched)
+    st = sched.pool_stats()
+    assert st["spec_verify_rows"] > st["spec_verify_calls"] > 0
+
+
+# -- validation -----------------------------------------------------------
+
+
+def test_unknown_tier_fails_request_not_engine(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params, tiers="w8a8,w4a8")
+    sched.submit(Request(1, PROMPT_A, max_new_tokens=4, tier="w2a8"))
+    sched.submit(Request(2, PROMPT_A, max_new_tokens=4, tier="w8a8"))
+    done = _drain(sched)
+    by_rid = {r.rid: r for r in done}
+    assert "unknown precision tier" in by_rid[1].error
+    assert by_rid[1].out_tokens == []
+    assert by_rid[2].error is None and len(by_rid[2].out_tokens) == 4
+
+
+def test_tiers_require_paged_pool(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousScheduler(cfg, params, max_batch=2, quant=Q8,
+                            max_ctx=64, paged=False, tiers=TIERS)
+
+
+def test_tiers_require_packed_params(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="quant policy"):
+        _sched(cfg, params, quant=None)
+
+
+def test_tier_activation_mismatch_rejected(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="activation precision"):
+        _sched(cfg, params, tiers="w4a4")
+
+
+def test_tier_spec_parsing_errors():
+    with pytest.raises(ValueError, match="mixed"):
+        parse_tier_specs("w8a8,w4a8r10")    # rZZ is not a plane subset
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_tier_specs("w4a8,w4a8")
+    with pytest.raises(ValueError, match="empty"):
+        parse_tier_specs(" , ")
