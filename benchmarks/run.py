@@ -10,6 +10,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    chaos_bench,
     decode_bench,
     fig9_activation_sweep,
     fig10_vs_bramac,
@@ -39,6 +40,7 @@ MODULES = {
     "prefix": prefix_bench,
     "spec": spec_bench,
     "tiers": tier_bench,
+    "chaos": chaos_bench,
 }
 
 

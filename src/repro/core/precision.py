@@ -261,6 +261,22 @@ def parse_tier_specs(
     return tuple(out)
 
 
+def degrade_order(
+    tiers: Union[Sequence[QuantConfig], Sequence[str]]
+) -> Tuple[QuantConfig, ...]:
+    """Tiers sorted quality-descending — the order graceful degradation
+    walks when pool pressure persists (``--degrade``): widest weight
+    planes first, activations as tiebreak. The LAST entry is the floor
+    every degraded admission lands on; the scheduler serves it through
+    the same :func:`truncate_policy_view` plane truncation as any
+    explicitly requested tier, so shedding quality never costs a second
+    weight copy."""
+    cfgs = [parse_tier_token(t) for t in tiers]
+    if not cfgs:
+        raise ValueError("degrade_order needs at least one tier")
+    return tuple(sorted(cfgs, key=lambda c: (-c.w_bits, -c.a_bits)))
+
+
 def plane_offset(target_bits: int, view_bits: int) -> int:
     """Number of low 2-bit planes to drop so `target_bits` storage serves
     a `view_bits` contraction. 0 when the leaf is already at or below the

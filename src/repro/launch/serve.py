@@ -65,6 +65,20 @@ draft must sit strictly below a slot's tier to speculate) and with the
 prefix cache (hashes are tier-scoped). Requires --continuous and a quant
 policy; per-tier counters are reported after the run.
 
+Request lifecycle & robustness: --deadline-ms gives every synthetic
+request a wall-clock deadline (missed ones retire with error="deadline",
+freeing their blocks like any retirement). On the paged pool, admission
+under pool pressure preempts a victim slot by default (--no-preempt to
+queue instead): the victim's resident blocks are registered into the
+prefix index and the request is requeued as prompt ++ generated, so it
+resumes warm — its greedy tokens are bitwise the uninterrupted stream.
+--victim-policy picks the victim (most-blocks | lowest-tier |
+latest-deadline). --degrade admits at the lowest precision tier once
+pool pressure persists (needs --tiers). --chaos-seed N arms a seeded
+FaultInjector that fires alloc/kernel/nan/callback faults at
+--chaos-rate per seam visit — the engine must survive every fault by
+degrading one request or one call; the chaos report prints what fired.
+
 --plans FILE persists the kernel registry's block-plan cache (autotune
 winners, e.g. the paged-attention bh knob) across process restarts:
 loaded before serving if the file exists, written back on exit.
@@ -134,6 +148,31 @@ def main():
                          "views of the one packed weight set inside the "
                          "same continuous batch (needs --continuous and "
                          "--quant/--policy)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall-clock deadline: requests not "
+                         "finished this many ms after arrival retire "
+                         "with error='deadline'")
+    ap.add_argument("--no-preempt", dest="preempt", action="store_false",
+                    default=None,
+                    help="never preempt a live slot under pool pressure "
+                         "(queue instead; default: preempt on the paged "
+                         "pool, resume warm from prefix-cached blocks)")
+    ap.add_argument("--victim-policy", default="most-blocks",
+                    choices=("most-blocks", "lowest-tier",
+                             "latest-deadline"),
+                    help="which live slot pool-pressure preemption evicts")
+    ap.add_argument("--degrade", action="store_true",
+                    help="under sustained pool pressure admit new "
+                         "requests at the lowest precision tier "
+                         "(needs --tiers; sticky for the request's life)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="arm the seeded fault injector (alloc/kernel/"
+                         "nan/callback seams) with this seed")
+    ap.add_argument("--chaos-rate", type=float, default=0.05,
+                    help="per-seam-visit fault probability when "
+                         "--chaos-seed is set")
+    ap.add_argument("--chaos-max-faults", type=int, default=None,
+                    help="cap total injected faults (default unbounded)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common N-token system prompt to every "
                          "synthetic request (exercises the prefix cache)")
@@ -158,6 +197,9 @@ def main():
     if args.tiers and not (args.quant or args.policy):
         raise SystemExit("--tiers serves plane-truncated views of packed "
                          "weights; add a quant policy (e.g. --quant w8a8)")
+    if args.degrade and not args.tiers:
+        raise SystemExit("--degrade lowers admissions to the floor tier; "
+                         "add --tiers")
     from repro.kernels import get_registry
 
     if args.backend:
@@ -207,6 +249,14 @@ def main():
         from repro.launch.dryrun import _parse_quant
 
         quant = _parse_quant(args.quant)
+    chaos = None
+    if args.chaos_seed is not None:
+        from repro.serving import FaultInjector
+
+        p = args.chaos_rate
+        chaos = FaultInjector(args.chaos_seed, p_alloc=p, p_kernel=p,
+                              p_nan=p, p_callback=p,
+                              max_faults=args.chaos_max_faults)
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            quant=quant, bucket=32,
                            paged=False if args.no_paged else None,
@@ -217,7 +267,11 @@ def main():
                            prefill_budget=args.prefill_budget,
                            speculate=args.speculate,
                            draft_policy=args.draft_policy,
-                           tiers=args.tiers)
+                           tiers=args.tiers,
+                           preempt=args.preempt,
+                           victim_policy=args.victim_policy,
+                           degrade=args.degrade,
+                           chaos=chaos)
 
     def make_requests():
         # Self-contained stream: every call reproduces the exact same
@@ -232,7 +286,9 @@ def main():
                         ]).astype(np.int64),
                         max_new_tokens=args.max_new,
                         temperature=0.0 if i % 2 == 0 else 0.7,
-                        tier=tier_list[i % len(tier_list)])
+                        tier=tier_list[i % len(tier_list)],
+                        deadline_s=(args.deadline_ms / 1e3
+                                    if args.deadline_ms else None))
                 for i in range(args.requests)]
         if args.continuous and args.rate > 0:
             t = 0.0
@@ -254,7 +310,7 @@ def main():
     t1 = time.perf_counter()
     done = serve(reqs)
     dt = time.perf_counter() - t1
-    total = sum(len(r.out_tokens) for r in done)
+    total = sum(len(r.out_tokens or ()) for r in done)
     mode = "continuous" if args.continuous else "static"
     print(f"{len(done)} requests, {total} tokens, {dt:.1f}s [{mode}]")
     print(f"  steady-state: {total/dt:.1f} tok/s | "
@@ -312,10 +368,32 @@ def main():
             print(f"  contiguous KV cache: "
                   f"{stats['resident_kv_bytes']/1e6:.2f} MB resident "
                   "(full per-slot reservation)")
+        if stats:
+            failed = [r for r in done if r.error]
+            if (failed or stats["preemptions"] or stats["deadline_misses"]
+                    or stats["pool_pressure_events"]):
+                print(f"  lifecycle: {stats['preemptions']} preemptions "
+                      f"(policy={stats['victim_policy']}), "
+                      f"{stats['deadline_misses']} deadline misses, "
+                      f"{stats['cancellations']} cancellations, "
+                      f"{stats['pool_pressure_events']} pressure events, "
+                      f"{stats['head_bypasses']} head-of-line bypasses, "
+                      f"{stats['degraded_requests']} degraded admissions")
+            if stats["chaos"]:
+                ch = stats["chaos"]
+                fired = ", ".join(f"{k}={v}" for k, v in ch["fired"].items())
+                print(f"  chaos: seed={ch['seed']} "
+                      f"{ch['total_fired']} faults fired ({fired}); "
+                      f"{stats['kernel_fallbacks']} reference-backend "
+                      f"fallbacks, {stats['nan_logit_events']} NaN-logit "
+                      f"retirements, {stats['callback_errors']} callback "
+                      f"errors survived")
+            for r in failed[:4]:
+                print(f"  req {r.rid} failed: {r.error}")
     print(f"  quant={args.policy or args.quant or 'off'} "
           f"kv_int8={args.kv_int8}")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
-        print(f"  req {r.rid}: {r.out_tokens[:10]}")
+        print(f"  req {r.rid}: {(r.out_tokens or [])[:10]}")
     if args.plans:
         n = get_registry().save_plans(args.plans)
         print(f"saved {n} block plans to {args.plans}")

@@ -211,7 +211,17 @@ class PagedKVCache:
     included for an int8 pool). Ownership lives host-side in the
     scheduler's allocator — per-block reference counts, an LRU of
     unreferenced-but-cached prefix blocks, and copy-on-write
-    (`copy_pool_block`) before a row appends into a shared block."""
+    (`copy_pool_block`) before a row appends into a shared block.
+
+    That host-side ownership is also what makes preemption free at this
+    layer: evicting a row clears its block-table ROW, never the pool
+    bytes. The K/V a preempted request computed stays resident in its
+    (now refcount-0, prefix-indexed) blocks, so a warm resume just maps
+    them into a fresh table row; nothing device-side is saved, restored,
+    or recomputed unless the blocks were meanwhile evicted for capacity.
+    Corollary: a pool block's bytes must be treated as immutable from
+    the moment any digest is registered against it (the scheduler
+    enforces this by copy-on-write even for a sole referencer)."""
 
     k: jax.Array
     v: jax.Array

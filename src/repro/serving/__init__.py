@@ -1,2 +1,8 @@
+from repro.serving.chaos import FaultInjector, InjectedFault  # noqa: F401
 from repro.serving.engine import ServingEngine  # noqa: F401
-from repro.serving.scheduler import ContinuousScheduler, Request  # noqa: F401
+from repro.serving.invariants import assert_pool_invariants  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    VICTIM_POLICIES,
+    ContinuousScheduler,
+    Request,
+)

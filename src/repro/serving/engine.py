@@ -21,7 +21,11 @@ execution modes:
     request may name a precision tier (`Request.tier`) and is served
     through a plane-truncated view of the same packed weights inside the
     same continuous batch — greedy bit-identical to a solo engine whose
-    whole policy is that tier (`repro.serving.scheduler`).
+    whole policy is that tier (`repro.serving.scheduler`). Requests carry
+    a lifecycle: `cancel(rid)` and per-request deadlines retire early
+    with an `error`, pool pressure may preempt a victim and later resume
+    it warm from prefix-cached blocks (bitwise the uninterrupted stream),
+    and a seeded `FaultInjector` (`chaos=`) exercises the failure seams.
   * `generate_static` — the classic static batch (batched prefill → decode
     loop, finished slots masked), kept as the baseline the serving
     benchmark measures continuous batching against. The decode loop exits
@@ -75,6 +79,12 @@ class ServingEngine:
         speculate: int = 0,
         draft_policy: Union[str, QuantConfig] = "w4a8",
         tiers=None,
+        preempt: Optional[bool] = None,
+        victim_policy: str = "most-blocks",
+        max_head_bypass: int = 4,
+        degrade: bool = False,
+        degrade_after: int = 2,
+        chaos=None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -97,6 +107,12 @@ class ServingEngine:
         self.speculate = speculate          # draft tokens/step (0 = off)
         self.draft_policy = draft_policy    # plane-truncation draft spec
         self.tiers = tiers                  # per-request precision tiers
+        self.preempt = preempt              # None = auto (on when paged)
+        self.victim_policy = victim_policy
+        self.max_head_bypass = max_head_bypass
+        self.degrade = degrade              # admit at floor tier under pressure
+        self.degrade_after = degrade_after
+        self.chaos = chaos                  # FaultInjector (tests/chaos runs)
         self._sched: Optional[ContinuousScheduler] = None
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
@@ -137,6 +153,12 @@ class ServingEngine:
                 speculate=self.speculate,
                 draft_policy=self.draft_policy,
                 tiers=self.tiers,
+                preempt=self.preempt,
+                victim_policy=self.victim_policy,
+                max_head_bypass=self.max_head_bypass,
+                degrade=self.degrade,
+                degrade_after=self.degrade_after,
+                chaos=self.chaos,
             )
         self._sched.on_token = self.on_token  # pick up late reassignment
         return self._sched
@@ -145,6 +167,13 @@ class ServingEngine:
         """KV-pool utilization of the continuous scheduler (None before
         the first `generate`)."""
         return self._sched.pool_stats() if self._sched is not None else None
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or live request on the continuous scheduler.
+        False if no scheduler exists yet or `rid` is unknown / already
+        retired; True means the request will come back with
+        ``error="cancelled"`` at the next step boundary."""
+        return self._sched.cancel(rid) if self._sched is not None else False
 
     def _ctx_needed(self, requests: List[Request]) -> int:
         return max(self._bucketed(len(r.prompt)) + max(r.max_new_tokens, 1)

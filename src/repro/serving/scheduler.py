@@ -85,6 +85,7 @@ from repro.configs.base import ModelConfig
 from repro.core.precision import (
     PrecisionPolicy,
     as_policy,
+    degrade_order,
     parse_tier_specs,
     parse_tier_token,
     quant_token,
@@ -104,6 +105,7 @@ from repro.models.kv_cache import (
     set_paged_row,
 )
 from repro.serving import sampling
+from repro.serving.chaos import FaultInjector, InjectedFault
 from repro.serving.speculative import (
     derive_draft_params,
     greedy_accept,
@@ -115,6 +117,13 @@ def _contig_headroom() -> int:
     from repro.models.transformer import DECODE_HEADROOM
 
     return DECODE_HEADROOM
+
+
+#: Preemption victim-selection policies: `most-blocks` frees the most pool
+#: capacity per eviction, `lowest-tier` sheds the cheapest quality class
+#: first, `latest-deadline` preempts the request with the most slack
+#: (no-deadline requests first, then the latest deadline).
+VICTIM_POLICIES = ("most-blocks", "lowest-tier", "latest-deadline")
 
 
 @dataclasses.dataclass
@@ -142,11 +151,26 @@ class Request:
     # (`error` set), like any other individually-rejected request.
     tier: Union[None, str, QuantConfig] = None
     arrival_time: float = 0.0
+    # Completion deadlines. `deadline_s` is wall-clock seconds after
+    # `arrival_time` (evaluated only while `run()` drives the clock);
+    # `deadline_steps` is a scheduler-step budget counted from `submit()`
+    # (deterministic, works under manual `step()` loops too). A request
+    # past either deadline — queued or mid-decode — is retired with
+    # `error="deadline"`, its blocks freed exactly like a normal
+    # retirement. None = no deadline.
+    deadline_s: Optional[float] = None
+    deadline_steps: Optional[int] = None
     on_token: Optional[Callable[["Request", int], None]] = None
     out_tokens: Optional[List[int]] = None
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     error: Optional[str] = None
+    # Times this request was preempted under pool pressure (each one
+    # requeued it as prompt ++ generated for a warm, bit-identical
+    # resume) and, when graceful degradation kicked in, the tier it was
+    # actually served at (sticky for the request's whole lifetime).
+    preemptions: int = 0
+    degraded_to: Optional[str] = None
     # Per-request speculative-decoding counters (filled when the
     # scheduler runs with `speculate`): draft tokens proposed for this
     # request and how many of them greedy verification accepted.
@@ -195,6 +219,12 @@ class ContinuousScheduler:
         speculate: int = 0,
         draft_policy: Union[str, QuantConfig] = "w4a8",
         tiers: Union[None, str, Tuple] = None,
+        preempt: Optional[bool] = None,
+        victim_policy: str = "most-blocks",
+        max_head_bypass: int = 4,
+        degrade: bool = False,
+        degrade_after: int = 2,
+        chaos: Optional[FaultInjector] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -210,6 +240,12 @@ class ContinuousScheduler:
         self.on_token = on_token
 
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        # Fault-tolerance twin of `_decode`: a separate jit object whose
+        # trace happens inside `use("reference")`, so an injected kernel
+        # fault can re-run the SAME step on the pure-jnp reference backend
+        # (bitwise the same logits/K-V) without retracing `_decode`.
+        self._decode_ref = jax.jit(self.model.decode_step,
+                                   donate_argnums=(1,))
         self._scatter = jax.jit(scatter_into_slot, donate_argnums=(0,))
         self._scatter_paged = jax.jit(scatter_into_paged, donate_argnums=(0,))
         self._prefill_cache = {}
@@ -360,6 +396,55 @@ class ContinuousScheduler:
             for k in [None, *tier_cfgs]
         }
 
+        # -- lifecycle, preemption, degradation, fault injection ---------
+        # Preemption (auto: on whenever the pool is paged): a pool-blocked
+        # admission may evict one live victim per step, registering the
+        # victim's resident K/V in the prefix index and requeueing it as
+        # prompt ++ generated — resume is greedy bit-identical to an
+        # uninterrupted run.
+        if preempt is None:
+            preempt = self.paged
+        elif preempt and not self.paged:
+            raise ValueError(
+                f"{cfg.name}: preemption needs the paged KV cache (the "
+                "contiguous scheduler has no pool pressure to relieve)")
+        self.preempt = bool(preempt)
+        if victim_policy not in VICTIM_POLICIES:
+            raise ValueError(
+                f"unknown victim_policy {victim_policy!r}; choose one of "
+                f"{VICTIM_POLICIES}")
+        self.victim_policy = victim_policy
+        if max_head_bypass < 0:
+            raise ValueError("max_head_bypass must be >= 0 (0 disables "
+                             "head-of-line bypass)")
+        self.max_head_bypass = int(max_head_bypass)
+        if degrade_after < 1:
+            raise ValueError("degrade_after must be >= 1")
+        self.degrade = bool(degrade)
+        self.degrade_after = int(degrade_after)
+        if degrade:
+            if not tier_cfgs:
+                raise ValueError(
+                    "degrade=True serves pressure admissions at the lowest "
+                    "configured precision tier — pass tiers= / --tiers")
+            self._degrade_to = quant_token(
+                degrade_order(tier_cfgs.values())[-1])
+        self.chaos = chaos
+        self._cancelled: set = set()        # rids to retire at next step()
+        self._step_calls = 0                # step() invocations (lifecycle clock)
+        self._head_bypass = 0               # consecutive bypasses of the blocked head
+        self._pressure_streak = 0           # consecutive pool-blocked steps
+        self.preemptions = 0
+        self.cancellations = 0
+        self.deadline_misses = 0
+        self.pool_pressure_events = 0
+        self.queue_wait_steps = 0
+        self.head_bypasses = 0
+        self.degraded_requests = 0
+        self.callback_errors = 0
+        self.nan_logit_events = 0
+        self.kernel_fallbacks = 0
+
         B = max_batch
         if paged:
             # Per-row virtual capacity = max_ctx rounded up to blocks; the
@@ -388,7 +473,13 @@ class ContinuousScheduler:
             # -- prefix-cache / refcount state (host-side ownership) --
             self._refcnt = np.zeros((usable + 1,), np.int64)
             self._prefix_index: Dict[bytes, int] = {}   # chunk hash → block
-            self._block_hash: Dict[int, bytes] = {}     # block → its hash
+            # block → every digest registered against it. One block can
+            # serve several chain positions — e.g. a retired row's
+            # straddle block carries the prompt-partial digest AND the
+            # extended (prompt ++ generated) full-chunk digest. Once any
+            # digest is attached the block's bytes are frozen:
+            # `_ensure_private_block` copies-on-write even at refcount 1.
+            self._block_hash: Dict[int, set] = {}
             self._lru: collections.OrderedDict = collections.OrderedDict()
             self._slot_hashes: List = [None] * B        # (full, partial)/slot
             self._suffix_cache = {}
@@ -451,7 +542,86 @@ class ContinuousScheduler:
         admission itself happens inside `step()` — including the prefix
         lookup, so a request submitted now can hit blocks that another
         request makes resident before a slot frees)."""
+        req._submit_step = self._step_calls   # step-budget deadline epoch
         self.waiting.append(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of `rid`. Processed at the start of the
+        next `step()` — nothing mutates mid-step, so calling this from an
+        `on_token` callback is safe. A queued request is dropped from the
+        queue; a live one (including a mid-chunk-prefill plan) is retired
+        with its blocks freed exactly like a normal retirement. Either way
+        it comes back from `step()`/`run()` with ``error="cancelled"`` and
+        whatever tokens it had emitted. Returns True iff `rid` is
+        currently queued or in flight."""
+        known = (any(r.rid == rid for r in self.waiting)
+                 or any(r is not None and r.rid == rid for r in self._slots))
+        if known:
+            self._cancelled.add(rid)
+        return known
+
+    def _deadline_expired(self, req: Request,
+                          now: Optional[float]) -> bool:
+        if req.deadline_steps is not None:
+            start = getattr(req, "_submit_step", None)
+            if (start is not None
+                    and self._step_calls - start > req.deadline_steps):
+                return True
+        if req.deadline_s is not None and now is not None:
+            return now - req.arrival_time > req.deadline_s
+        return False
+
+    def _retire_abnormal(self, b: int, reason: str) -> Request:
+        """Retire live row `b` off the normal finish path (cancellation,
+        deadline, poisoned logits): mark the terminal state, free its
+        blocks / reservation / chunk plan exactly like a normal
+        retirement, and hand the request back with whatever tokens it
+        emitted."""
+        req = self._slots[b]
+        req.error = reason
+        if req.out_tokens is None:
+            req.out_tokens = []
+        req.t_done = self._now()
+        self._release_slot(b)
+        return req
+
+    def _lifecycle_phase(self) -> List[Request]:
+        """Process cancellations and deadline expiries — queued requests
+        leave the queue, live rows are retired with their blocks freed —
+        before this step admits or decodes anything."""
+        out: List[Request] = []
+        now = self._now()
+        check_deadlines = any(
+            r.deadline_s is not None or r.deadline_steps is not None
+            for r in [*self.waiting,
+                      *(r for r in self._slots if r is not None)])
+        if not self._cancelled and not check_deadlines:
+            return out
+        keep: Deque[Request] = collections.deque()
+        while self.waiting:
+            r = self.waiting.popleft()
+            if r.rid in self._cancelled:
+                self.cancellations += 1
+                self._fail(r, "cancelled")
+                out.append(r)
+            elif self._deadline_expired(r, now):
+                self.deadline_misses += 1
+                self._fail(r, "deadline")
+                out.append(r)
+            else:
+                keep.append(r)
+        self.waiting = keep
+        for b, r in enumerate(self._slots):
+            if r is None:
+                continue
+            if r.rid in self._cancelled:
+                self.cancellations += 1
+                out.append(self._retire_abnormal(b, "cancelled"))
+            elif self._deadline_expired(r, now):
+                self.deadline_misses += 1
+                out.append(self._retire_abnormal(b, "deadline"))
+        self._cancelled.clear()   # stale rids (already retired) drop here
+        return out
 
     def _bucketed(self, n: int) -> int:
         return max(self.bucket, -(-n // self.bucket) * self.bucket)
@@ -470,11 +640,32 @@ class ContinuousScheduler:
 
     # -- paged-pool accounting ---------------------------------------------
 
+    @staticmethod
+    def _serve_tokens(req: Request) -> np.ndarray:
+        """The token sequence admission serves for `req`: its prompt, plus
+        any tokens it already generated before a preemption requeued it.
+        Re-admitting `prompt ++ generated` is exactly what makes resume
+        bit-identical — the resumed request prefills (or prefix-hits) the
+        same positions an uninterrupted run would have resident, and its
+        next sampled token is the (seed, rid, len(out))-stream token an
+        uninterrupted run would draw."""
+        if not req.out_tokens:
+            return np.asarray(req.prompt)
+        return np.concatenate([np.asarray(req.prompt, np.int64),
+                               np.asarray(req.out_tokens, np.int64)])
+
+    @staticmethod
+    def _serve_len(req: Request) -> int:
+        return len(req.prompt) + len(req.out_tokens or ())
+
     def _need_tokens(self, req: Request) -> int:
         # The first sampled token comes from the prefill logits and writes
         # no cache slot; only the remaining max_new - 1 decode inputs do.
         # max_new <= 0 still emits that prefill token, so it reserves like
         # max_new = 1 (anything less would under-reserve the prompt).
+        # Invariant under preemption/resume: the served length grows by
+        # exactly the tokens already emitted while the owed decode inputs
+        # shrink by the same count.
         return len(req.prompt) + max(req.max_new_tokens, 1) - 1
 
     def _need_blocks(self, req: Request) -> int:
@@ -486,18 +677,145 @@ class ContinuousScheduler:
         Non-None iff the tier can never be served here."""
         if req.tier is None:
             req._tier_key = None
-            return None
-        try:
-            key = quant_token(parse_tier_token(req.tier))
-        except ValueError as e:
-            return f"request {req.rid}: bad precision tier: {e}"
-        if key not in self._tier_views:
-            have = sorted(self._tier_cfgs) or "none configured"
-            return (f"request {req.rid}: unknown precision tier {key!r}; "
-                    f"scheduler tiers: {have} — pass tiers= / --tiers to "
-                    "serve this class")
-        req._tier_key = key
+        else:
+            try:
+                key = quant_token(parse_tier_token(req.tier))
+            except ValueError as e:
+                return f"request {req.rid}: bad precision tier: {e}"
+            if key not in self._tier_views:
+                have = sorted(self._tier_cfgs) or "none configured"
+                return (f"request {req.rid}: unknown precision tier {key!r}; "
+                        f"scheduler tiers: {have} — pass tiers= / --tiers to "
+                        "serve this class")
+            req._tier_key = key
+        # A request admitted under graceful degradation stays degraded for
+        # life: its emitted tokens and registered K/V are at the degraded
+        # tier, so resuming (after a preemption) at the original tier
+        # would splice two precisions into one stream.
+        if req.degraded_to is not None:
+            req._tier_key = req.degraded_to
         return None
+
+    def _degrade_tier(self, req: Request) -> bool:
+        """Point this admission attempt at the cheapest configured tier
+        (graceful degradation under sustained pool pressure). Transient
+        until the request actually admits — `_tier_error` recomputes
+        `_tier_key` from `req.tier` on every attempt — and committed to
+        `req.degraded_to` by the admission loop. Returns True iff the
+        attempt was newly lowered."""
+        low = self._degrade_to
+        cur = req._tier_key
+        cur_bits = (self._tier_cfgs[cur].w_bits if cur is not None
+                    else 1 << 30)   # storage policy: above every tier
+        if req.degraded_to is None and self._tier_cfgs[low].w_bits < cur_bits:
+            req._tier_key = low
+            return True
+        return False
+
+    # -- preemption: victim choice, warm-resume requeue ---------------------
+
+    def _freeable(self, b: int) -> int:
+        """Exact `_avail` increase releasing row `b` would produce: its
+        unclaimed reservation plus every table block only it references
+        (shared blocks survive under their other referencers, so evicting
+        this row frees nothing there)."""
+        row = self._block_tab[b]
+        own = sum(1 for blk in row[row >= 0] if self._refcnt[int(blk)] == 1)
+        return int(own) + int(self._reserved[b])
+
+    @staticmethod
+    def _deadline_rank(req: Request):
+        """Slack ordering for the `latest-deadline` victim policy: bigger
+        = more slack = preferred victim. No-deadline requests outrank any
+        deadline; wall-clock deadlines rank by absolute deadline time;
+        step budgets rank below wall-clock, by their budget horizon."""
+        if req.deadline_s is None and req.deadline_steps is None:
+            return (2, 0.0)
+        if req.deadline_s is not None:
+            return (1, req.arrival_time + req.deadline_s)
+        return (0, float(getattr(req, "_submit_step", 0)
+                         + req.deadline_steps))
+
+    def _pick_victim(self, shortfall: int, exclude) -> Optional[int]:
+        """Choose a preemption victim whose release alone covers the
+        blocked admission's shortfall (a cascade of evictions for one
+        admission is never worth the recompute — return None and let the
+        head wait instead). Mid-chunk-plan rows are not preemptible
+        (their resident blocks are partially written) and neither are
+        rows admitted earlier in this same step."""
+        cands = [b for b, r in enumerate(self._slots)
+                 if r is not None and b not in self._chunk_plans
+                 and b not in exclude and self._freeable(b) >= shortfall]
+        if not cands:
+            return None
+        if self.victim_policy == "most-blocks":
+            key = lambda b: (self._freeable(b), -b)       # noqa: E731
+        elif self.victim_policy == "lowest-tier":
+            def key(b):
+                t = self._slot_tier[b]
+                bits = (self._tier_cfgs[t].w_bits if t is not None
+                        else 1 << 30)
+                return (-bits, self._freeable(b), -b)
+        else:  # latest-deadline
+            def key(b):
+                return (self._deadline_rank(self._slots[b]),
+                        self._freeable(b), -b)
+        return max(cands, key=key)
+
+    def _preempt(self, b: int) -> None:
+        """Preempt row `b` under pool pressure: release the slot — which
+        registers its resident prompt+generated blocks in the prefix
+        index (`_register_retired`) — and requeue the request at the BACK
+        of the waiting queue as prompt ++ generated. Re-admission rides
+        the ordinary suffix-only warm path over those registered blocks
+        (or recomputes them cold if they were evicted meanwhile); either
+        way the resumed stream is bitwise the uninterrupted one."""
+        req = self._slots[b]
+        self.preemptions += 1
+        req.preemptions += 1
+        self._release_slot(b)
+        self.waiting.append(req)
+
+    def _bypass_candidate(self, deg: bool):
+        """Head-of-line mitigation: when the queue head is pool-blocked,
+        find the first later request that is admissible and fits the
+        current capacity — bounded to `max_head_bypass` consecutive
+        bypasses so a large head is never starved by a stream of small
+        arrivals. Returns (queue index, match, newly-degraded) or
+        (None, None, False)."""
+        if self._head_bypass >= self.max_head_bypass:
+            return None, None, False
+        for i in range(1, len(self.waiting)):
+            r = self.waiting[i]
+            if self._reject_reason(r) is not None:
+                continue   # rejected for real when it reaches the head
+            d = self._degrade_tier(r) if deg else False
+            m = self._match_prefix(r)
+            if m[2] + m[3] <= self._avail:
+                return i, m, d
+        return None, None, False
+
+    # -- fault-tolerant decode dispatch -------------------------------------
+
+    def _decode_call(self, params, cur) -> jnp.ndarray:
+        """Jitted decode dispatch with the kernel fault seam: an injected
+        chaos failure raised AT dispatch (before the donated cache enters
+        the jitted call, so its buffers stay valid) is caught and the
+        same step re-runs on the pure-jnp `reference` backend — bitwise
+        the same logits and K/V writes, so one flaky backend call degrades
+        to a slow call, never to a lost request or a broken stream."""
+        try:
+            if self.chaos is not None and self.chaos.fire("kernel"):
+                raise InjectedFault("kernel dispatch")
+            self.cache, logits = self._decode(params, self.cache,
+                                              jnp.asarray(cur))
+        except InjectedFault:
+            self.kernel_fallbacks += 1
+            from repro.kernels import get_registry
+            with get_registry().use("reference"):
+                self.cache, logits = self._decode_ref(params, self.cache,
+                                                      jnp.asarray(cur))
+        return logits
 
     def _reject_reason(self, req: Request) -> Optional[str]:
         """Non-None iff the request can never be served by this scheduler
@@ -547,8 +865,7 @@ class ContinuousScheduler:
                 "should guarantee a free or evictable block"
             )
         blk, _ = self._lru.popitem(last=False)
-        h = self._block_hash.pop(blk, None)
-        if h is not None:
+        for h in self._block_hash.pop(blk, ()):
             self._prefix_index.pop(h, None)
         self.prefix_evictions += 1
         self._free.append(blk)
@@ -581,13 +898,16 @@ class ContinuousScheduler:
     def _ensure_private_block(self, b: int, j: int) -> None:
         """Make virtual block `j` of row `b` writable: allocate it if the
         table entry is empty, and copy-on-write when it is a block the row
-        shares (refcount > 1) with other rows or with the prefix cache —
-        the sharers keep the pristine block, the appender gets a private
-        copy (charged to its reservation like any other allocation)."""
+        shares — with other rows (refcount > 1) or with the prefix cache
+        itself (a registered digest describes its bytes, so even a sole
+        referencer must not append in place: a future claimant of that
+        digest trusts the covered slots). The sharers/cache keep the
+        pristine block, the appender gets a private copy (charged to its
+        reservation like any other allocation)."""
         blk = int(self._block_tab[b, j])
         if blk < 0:
             self._alloc_block(b, j)
-        elif self._refcnt[blk] > 1:
+        elif self._refcnt[blk] > 1 or blk in self._block_hash:
             dst = self._take_free_block()
             self._refcnt[dst] = 1
             self.cache = self._cow(self.cache, blk, dst)
@@ -665,17 +985,27 @@ class ContinuousScheduler:
         """Retire row `b`: *decref* its blocks (shared prefix blocks stay
         live under their other referencers; last-reference prefix blocks
         are retained in the LRU; everything else frees) and return its
-        unclaimed reservation. The row's partial last prompt block is
-        registered in the prefix index here — not at admission — because a
-        live row appends into that block in place; once the row stops
-        writing, the block's first `len % block_size` slots are immutable
-        and safe to share."""
+        unclaimed reservation. The row's resident content — prompt AND
+        decode-generated tokens — is registered in the prefix index here,
+        not at admission, because a live row appends into its tail block
+        in place; once the row stops writing, every written slot is
+        immutable and safe to share (`_register_retired`). A row retired
+        mid-chunk-plan (cancel/deadline/preemption) drops its service-
+        queue entry and registers nothing new: its unwritten tail blocks
+        hold no valid bytes (blocks earlier chunks fully covered were
+        already registered progressively and stay valid)."""
+        req = self._slots[b]
+        tier = self._slot_tier[b]
         self._slots[b] = None
         self._slot_tier[b] = None
         if not self.paged:
             return
+        plan = self._chunk_plans.pop(b, None)
+        if plan is not None:
+            self._chunk_queue.remove(b)
+            self._slot_hashes[b] = None
         if self.prefix_cache:
-            self._register_partial(b)
+            self._register_retired(b, req, tier)
         self._slot_hashes[b] = None
         row = self._block_tab[b]
         for blk in row[row >= 0]:
@@ -715,14 +1045,16 @@ class ContinuousScheduler:
         return full, partial
 
     def _req_hashes(self, req: Request) -> Tuple[List[bytes], Optional[bytes]]:
-        """Chain hashes for `req`, memoized on the request object — the
-        pool-full path re-checks the queue head every step, and the
-        digests depend only on (prompt, block_size, tier)."""
+        """Chain hashes for `req`'s *served* tokens (prompt ++ generated),
+        memoized on the request object — the pool-full path re-checks the
+        queue head every step, and the digests depend only on (served
+        length, block_size, tier); the length key invalidates the memo
+        when a preemption requeues the request with more tokens."""
         tier = getattr(req, "_tier_key", None)
+        key = (self.block_size, tier, self._serve_len(req))
         cached = getattr(req, "_prefix_hashes", None)
-        if cached is None or cached[0] != (self.block_size, tier):
-            cached = ((self.block_size, tier),
-                      self._hash_chunks(req.prompt, tier))
+        if cached is None or cached[0] != key:
+            cached = (key, self._hash_chunks(self._serve_tokens(req), tier))
             req._prefix_hashes = cached
         return cached[1]
 
@@ -751,7 +1083,7 @@ class ContinuousScheduler:
             blk = self._prefix_index.get(partial)
             if blk is not None:
                 hits.append((full_hits, blk))
-                resident = len(req.prompt)
+                resident = self._serve_len(req)
         revive = sum(1 for _, b in hits if self._refcnt[b] == 0)
         return hits, resident, revive, need - full_hits, hashes
 
@@ -780,10 +1112,14 @@ class ContinuousScheduler:
             full = full[:limit]
         for j, h in enumerate(full):
             blk = int(self._block_tab[slot, j])
-            if blk < 0 or h in self._prefix_index or blk in self._block_hash:
+            if blk < 0 or h in self._prefix_index:
                 continue
+            # An already-hashed block may take a second digest (the
+            # straddle block of a retired row carries both the prompt-
+            # partial and the extended full-chunk digest); its bytes are
+            # frozen from the first registration on.
             self._prefix_index[h] = blk
-            self._block_hash[blk] = h
+            self._block_hash.setdefault(blk, set()).add(h)
 
     def _register_partial(self, slot: int) -> None:
         """Index the trailing partial prompt block at *retirement*. While
@@ -800,19 +1136,73 @@ class ContinuousScheduler:
         if j >= self._max_blocks:
             return
         blk = int(self._block_tab[slot, j])
-        if (blk < 0 or partial in self._prefix_index
-                or blk in self._block_hash):
+        if blk < 0 or partial in self._prefix_index:
             return
         self._prefix_index[partial] = blk
-        self._block_hash[blk] = partial
+        self._block_hash.setdefault(blk, set()).add(partial)
+
+    def _register_retired(self, b: int, req: Optional[Request],
+                          tier: Optional[str]) -> None:
+        """Register row `b`'s resident blocks — prompt AND decode-
+        generated — in the prefix index at retirement or preemption.
+
+        Two digest chains are registered, in priority order:
+
+        1. the admission chain — the prompt's full blocks plus its partial
+           tail, now immutable. This keeps the original contract: a later
+           *same-prompt* request hits the whole prompt, shares the partial
+           block, and copies-on-write when it appends.
+        2. the extended chain over ``serve_tokens[:pos]`` (pos = next
+           write position: everything written, excluding the final
+           sampled token whose K/V never lands). Blocks holding generated
+           tokens get fresh digests, and the straddle block (prompt tail
+           + first generated tokens) takes the extended full-chunk digest
+           as a *second* hash. A later admission of ``prompt ++
+           generated`` — a preempted request resuming, or a multi-turn
+           conversation re-submitting its history — then claims these
+           blocks and prefills only the tail.
+
+        Shared digests between the chains (every full prompt block; the
+        whole chain when nothing was generated) are deduped by the usual
+        ``h in _prefix_index`` guard."""
+        if self._slot_hashes[b] is None or req is None:
+            return
+        self._register_full(b)
+        self._register_partial(b)
+        pos = int(self._pos_host[b])
+        toks = self._serve_tokens(req)[:pos]
+        self._slot_hashes[b] = self._hash_chunks(toks, tier)
+        self._register_full(b)
+        self._register_partial(b)
+
+    def _lifecycle_stats(self) -> dict:
+        """Lifecycle / fault-tolerance counters — meaningful in every
+        cache mode (preemption/pressure counters stay 0 off-pool)."""
+        return {
+            "preemptions": self.preemptions,
+            "cancellations": self.cancellations,
+            "deadline_misses": self.deadline_misses,
+            "pool_pressure_events": self.pool_pressure_events,
+            "queue_wait_steps": self.queue_wait_steps,
+            "head_bypasses": self.head_bypasses,
+            "degrade": self.degrade,
+            "degraded_requests": self.degraded_requests,
+            "preempt": self.preempt,
+            "victim_policy": self.victim_policy,
+            "callback_errors": self.callback_errors,
+            "nan_logit_events": self.nan_logit_events,
+            "kernel_fallbacks": self.kernel_fallbacks,
+            "chaos": self.chaos.counts() if self.chaos else None,
+        }
 
     def pool_stats(self) -> dict:
         """KV-memory utilization: resident bytes actually backing live
-        tokens vs. the contiguous worst-case reservation."""
+        tokens vs. the contiguous worst-case reservation — plus the
+        lifecycle / preemption / fault-injection counters."""
         kv = self.cache.kv
         if kv is None:
             return {"paged": False, "resident_kv_bytes": 0,
-                    "reserved_kv_bytes": 0}
+                    "reserved_kv_bytes": 0, **self._lifecycle_stats()}
         if not self.paged:
             # Count every cache plane (incl. int8 scale planes) — the
             # whole reservation is resident for the scheduler's lifetime.
@@ -821,7 +1211,8 @@ class ContinuousScheduler:
                         if a is not None)
             return {"paged": False,
                     "resident_kv_bytes": total,
-                    "reserved_kv_bytes": total}
+                    "reserved_kv_bytes": total,
+                    **self._lifecycle_stats()}
         per_token = (kv.k.shape[0] * int(np.prod(kv.k.shape[3:]))
                      * 2 * kv.k.dtype.itemsize)
         if kv.quantized:
@@ -886,6 +1277,8 @@ class ContinuousScheduler:
                  if self.spec_draft_tokens else 0.0),
             "spec_verify_calls": self.spec_verify_calls,
             "spec_verify_rows": self.spec_verify_rows,
+            # -- lifecycle / preemption / fault injection --
+            **self._lifecycle_stats(),
             # -- per-request precision tiers --
             "tier_serving": bool(self._tier_cfgs),
             "tiers": {
@@ -923,9 +1316,12 @@ class ContinuousScheduler:
 
     def _admit(self, req: Request, slot: int, match=None) -> Optional[Request]:
         """Prefill `req` — solo cold, or suffix-only on a prefix-cache hit
-        — and scatter its state into batch row `slot`. Returns the request
+        — and scatter its state into batch row `slot`. A preempted request
+        re-admits here with its served tokens = prompt ++ generated, so
+        the warm path picks up its registered blocks. Returns the request
         if it finished on its very first token."""
-        n = len(req.prompt)
+        toks = self._serve_tokens(req)
+        n = len(toks)
         tier = self._claim_tier(req, slot)
         if self.paged:
             hits, resident, revive, reserve, hashes = (
@@ -952,7 +1348,7 @@ class ContinuousScheduler:
             if self.paged:
                 self.prefill_tokens_computed += L
             tokens = np.zeros((1, L), np.int32)
-            tokens[0, :n] = req.prompt  # right-pad; real length via `lengths`
+            tokens[0, :n] = toks        # right-pad; real length via `lengths`
             solo, logits = self._prefill_fn(L)(
                 self._tier_views[tier],
                 {"tokens": jnp.asarray(tokens),
@@ -974,23 +1370,31 @@ class ContinuousScheduler:
     def _first_token(self, req: Request, slot: int, logits) -> Optional[Request]:
         """Sample the request's first output token from its prefill logits
         and arm the slot's decode state — the shared admission tail of the
-        solo, suffix and chunked prefill paths. Returns the request if it
-        finished on that very first token (slot released)."""
+        solo, suffix and chunked prefill paths. A resumed (previously
+        preempted) request keeps its earlier tokens: its next token is
+        sampled at PRNG step `len(out_tokens)`, exactly the stream index
+        an uninterrupted run would use, so resume is bit-identical even at
+        temperature > 0. Returns the request if it finished on that very
+        first token (slot released)."""
+        step0 = len(req.out_tokens or ())
         key = sampling.request_key(self.seed, req.rid)
         tok = int(np.asarray(sampling.sample_tokens(
             logits[:, -1, :],
             np.asarray([req.temperature], np.float32),
             np.asarray([req.top_k], np.int32),
             key[None],
-            np.zeros((1,), np.int32),
+            np.asarray([step0], np.int32),
         ))[0])
         self._cur[slot, 0] = tok
         self._temps[slot] = req.temperature
         self._top_ks[slot] = req.top_k
         self._keys[slot] = key
-        self._steps[slot] = 1
+        self._steps[slot] = step0 + 1
         self._slots[slot] = req
-        req.out_tokens = [tok]
+        if req.out_tokens:
+            req.out_tokens.append(tok)     # resumed: extend, don't reset
+        else:
+            req.out_tokens = [tok]
         if req.t_first is None:
             req.t_first = self._now()
         self._emit(req, tok)
@@ -1013,13 +1417,14 @@ class ContinuousScheduler:
         prefilled — the first sampled token comes from its logits — but
         positions already resident are never re-written, so a fully
         cached prompt admits without moving any KV data."""
-        n = len(req.prompt)
+        toks = self._serve_tokens(req)
+        n = len(toks)
         start = min(resident, n - 1)
         ls = n - start
         Ls = self._bucketed(ls)
         self.prefill_tokens_computed += Ls
         tokens = np.zeros((1, Ls), np.int32)
-        tokens[0, :ls] = req.prompt[start:]
+        tokens[0, :ls] = toks[start:]
         kv = self.cache.kv
         # Clamp the per-layer pool gather to the blocks that actually
         # cover the prefix (host-known bound, same trick as
@@ -1065,7 +1470,8 @@ class ContinuousScheduler:
         masked out of decoding (device table row all -1, see `_sync_table`)
         and out of sampling, and its prompt blocks stay unregistered in
         the prefix index (their bytes don't exist yet)."""
-        n = len(req.prompt)
+        toks = self._serve_tokens(req)
+        n = len(toks)
         self._claim_tier(req, slot)
         hits, resident, revive, reserve, hashes = match
         self.prompt_tokens_seen += n
@@ -1086,7 +1492,8 @@ class ContinuousScheduler:
         # Chunks start at the warm-prefix boundary: `resident` below a
         # full-prompt hit is whole blocks only, so chunk writes begin at a
         # block boundary and never touch a block shared with other rows.
-        self._chunk_plans[slot] = {"req": req, "next": resident, "n": n}
+        self._chunk_plans[slot] = {"req": req, "toks": toks,
+                                   "next": resident, "n": n}
         self._chunk_queue.append(slot)
         self._table_dirty = True       # mask this row on the next sync
 
@@ -1105,7 +1512,7 @@ class ContinuousScheduler:
         Lc = self.prefill_budget
         t = min(Lc, n - start)
         tokens = np.zeros((1, Lc), np.int32)
-        tokens[0, :t] = req.prompt[start:start + t]
+        tokens[0, :t] = plan["toks"][start:start + t]
         # Clamp the kernel's block-table operand to the blocks covering
         # [0, start + t), bucketed like _prefill_suffix's gather clamp so
         # the compiled signature count stays bounded: one executable per
@@ -1142,16 +1549,30 @@ class ContinuousScheduler:
         return self._first_token(req, slot, logits)
 
     def _emit(self, req: Request, tok: int) -> None:
+        """Count the token and stream it to the per-request and scheduler-
+        level `on_token` callbacks. Callbacks are USER code: one raising
+        must never kill the engine loop (it used to propagate out of
+        `step()` and take every live slot down with it) — it marks only
+        this request errored, and `_finished` retires it at the caller."""
         self.tokens_emitted += 1
         self.tier_counters[getattr(req, "_tier_key", None)]["tokens"] += 1
-        if req.on_token is not None:
-            req.on_token(req, tok)
-        if self.on_token is not None:
-            self.on_token(req, tok)
+        callbacks = [cb for cb in (req.on_token, self.on_token)
+                     if cb is not None]
+        if not callbacks:
+            return
+        try:
+            if self.chaos is not None and self.chaos.fire("callback"):
+                raise InjectedFault("on_token callback")
+            for cb in callbacks:
+                cb(req, tok)
+        except Exception as e:  # noqa: BLE001 — isolate user-code faults
+            self.callback_errors += 1
+            req.error = f"on_token callback raised: {e!r}"
 
     @staticmethod
     def _finished(req: Request, tok: int) -> bool:
-        return (len(req.out_tokens) >= req.max_new_tokens
+        return (req.failed
+                or len(req.out_tokens) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id))
 
     # -- self-speculative decoding -----------------------------------------
@@ -1222,8 +1643,7 @@ class ContinuousScheduler:
             if todo != active:
                 active = todo
                 self._push_spec_table(active)
-            self.cache, logits = self._decode(self._draft_params, self.cache,
-                                              jnp.asarray(cur))
+            logits = self._decode_call(self._draft_params, cur)
             toks = np.asarray(jnp.argmax(
                 logits[:, -1, :].astype(jnp.float32), axis=-1))
             for b in active:
@@ -1344,8 +1764,7 @@ class ContinuousScheduler:
                 p = jnp.asarray(pos0)
                 self.cache = self._set_positions(self.cache, p, p)
             self._push_spec_table(set(groups[key]))
-            self.cache, logits = self._decode(self._tier_views[key],
-                                              self.cache, cur)
+            logits = self._decode_call(self._tier_views[key], cur)
             self.tier_counters[key]["decode_calls"] += 1
             rows = np.asarray(logits[:, -1, :])
             if out is None:
@@ -1360,60 +1779,112 @@ class ContinuousScheduler:
     # -- the decode loop ----------------------------------------------------
 
     def step(self) -> List[Request]:
-        """One scheduler step: admit waiting requests into free slots
+        """One scheduler step: process lifecycle events (cancellations,
+        deadline expiries), admit waiting requests into free slots
         (chunked-prefill plan by default; suffix-only prefill on a
-        full-prompt prefix hit; queue FIFO when the pool can't cover an
-        admission's revive + reservation draw), spend at most one
-        ``prefill_budget``-token chunk of in-flight admission prefill,
-        run one batched decode step, sample, retire finished slots. Live
-        slots always decode — a chunk costs them one kernel call of extra
-        latency per step, never a skipped step. Returns the requests that
-        finished this step (including any rejected as oversized — those
-        carry ``error`` and no tokens)."""
-        finished: List[Request] = []
-        blocked = False
+        full-prompt prefix hit), spend at most one ``prefill_budget``-token
+        chunk of in-flight admission prefill, run one batched decode step,
+        sample, retire finished slots. Live slots always decode — a chunk
+        costs them one kernel call of extra latency per step, never a
+        skipped step.
+
+        When the pool can't cover an admission's revive + reservation
+        draw the request queues FIFO — but first the scheduler may (a)
+        preempt one victim whose release alone covers the shortfall
+        (``preempt``, warm bit-identical resume) and (b) admit a smaller
+        admissible request past the blocked head, at most
+        ``max_head_bypass`` consecutive times (head-of-line mitigation,
+        starvation-free). With ``degrade``, admissions during sustained
+        pressure are served at the cheapest configured tier. Returns the
+        requests that finished this step (including any rejected as
+        oversized, cancelled, past deadline, or individually failed —
+        those carry ``error``)."""
+        self._step_calls += 1
+        finished: List[Request] = list(self._lifecycle_phase())
+        pressure = False
         chunk_admitted = False
-        for b in range(self.max_batch):
-            if self._slots[b] is not None or blocked or chunk_admitted:
-                continue
-            while self.waiting:
-                head = self.waiting[0]
-                reason = self._reject_reason(head)
-                if reason is not None:
-                    # Oversized: reject just this request and keep serving.
-                    self.waiting.popleft()
-                    self._fail(head, reason)
-                    finished.append(head)
-                    continue
-                match = self._match_prefix(head) if self.paged else None
-                if self.paged and match[2] + match[3] > self._avail:
-                    # revive + reserve is the admission's true capacity
-                    # draw (shared live blocks are free).
-                    blocked = True  # pool full: queue (FIFO), don't crash
-                    break
+        preempted = False
+        admitted_now: set = set()
+        free: Deque[int] = collections.deque(
+            b for b in range(self.max_batch) if self._slots[b] is None)
+        deg = self.degrade and self._pressure_streak >= self.degrade_after
+        while free and self.waiting and not chunk_admitted:
+            slot = free[0]
+            head = self.waiting[0]
+            reason = self._reject_reason(head)
+            if reason is not None:
+                # Oversized / bad tier: reject just this request.
                 self.waiting.popleft()
-                if self.chunked_prefill and match[1] < len(head.prompt):
-                    # Uncached prompt tail → chunk plan. (A full-prompt
-                    # prefix hit moves no KV and stays on the suffix
-                    # path: its one-token "prefill" reads shared blocks
-                    # the chunk kernel must never write.) One chunked
-                    # admission per step: a same-prefix follower admitted
-                    # in this same step would match against an index this
-                    # plan hasn't written to yet and cold-prefill blocks
-                    # it could share — admitted next step, it hits the
-                    # blocks the chunks have landed (and registered) by
-                    # then.
-                    self._admit_chunked(head, b, match)
-                    chunk_admitted = True
-                    break
-                done = self._admit(head, b, match)
-                if done is not None:
-                    # Finished on its prefill token (max_new <= 1 /
-                    # instant EOS) — the slot is free again, keep
-                    # admitting into it this same step.
-                    finished.append(done)
-                    continue
-                break
+                self._fail(head, reason)
+                finished.append(head)
+                continue
+            idx = 0
+            was_degraded = self._degrade_tier(head) if deg else False
+            match = self._match_prefix(head) if self.paged else None
+            if self.paged:
+                # revive + reserve is the admission's true capacity draw
+                # (shared live blocks are free).
+                short = match[2] + match[3] > self._avail
+                if (not short and self.chaos is not None
+                        and self.chaos.fire("alloc")):
+                    short = True   # injected transient reservation failure
+                if short:
+                    pressure = True
+                    self.pool_pressure_events += 1
+                    shortfall = match[2] + match[3] - self._avail
+                    # (1) Preempt one victim for the head — never for a
+                    # head that was itself preempted (ping-pong guard),
+                    # and at most once per step.
+                    if (self.preempt and not preempted
+                            and head.preemptions == 0):
+                        victim = self._pick_victim(shortfall, admitted_now)
+                        if victim is not None:
+                            self._preempt(victim)
+                            preempted = True
+                            free.append(victim)
+                            continue   # retry head against freed blocks
+                    # (2) Bounded bypass: admit a smaller admissible
+                    # request past the blocked head.
+                    idx, match, was_degraded = self._bypass_candidate(deg)
+                    if idx is None:
+                        break          # head keeps FIFO priority: wait
+                    self.head_bypasses += 1
+                    self._head_bypass += 1
+            req = self.waiting[idx]
+            del self.waiting[idx]
+            if idx == 0:
+                self._head_bypass = 0  # the head itself is admitting
+            if was_degraded and req.degraded_to is None:
+                req.degraded_to = req._tier_key
+                self.degraded_requests += 1
+            if (self.chunked_prefill and match is not None
+                    and match[1] < self._serve_len(req)):
+                # Uncached prompt tail → chunk plan. (A full-prompt
+                # prefix hit moves no KV and stays on the suffix
+                # path: its one-token "prefill" reads shared blocks
+                # the chunk kernel must never write.) One chunked
+                # admission per step: a same-prefix follower admitted
+                # in this same step would match against an index this
+                # plan hasn't written to yet and cold-prefill blocks
+                # it could share — admitted next step, it hits the
+                # blocks the chunks have landed (and registered) by
+                # then.
+                self._admit_chunked(req, slot, match)
+                admitted_now.add(slot)
+                chunk_admitted = True
+                free.popleft()
+                continue
+            done = self._admit(req, slot, match)
+            if done is not None:
+                # Finished on its prefill token (max_new <= 1 /
+                # instant EOS) — the slot is free again, keep
+                # admitting into it this same step.
+                finished.append(done)
+                continue
+            admitted_now.add(slot)
+            free.popleft()
+        self._pressure_streak = self._pressure_streak + 1 if pressure else 0
+        self.queue_wait_steps += len(self.waiting)
 
         # Spend one budgeted chunk of admission prefill alongside this
         # step's decode — round-robin across queued plans: the serviced
@@ -1459,13 +1930,28 @@ class ContinuousScheduler:
             # whose whole policy is this tier runs, so bit-identity for
             # the single-tier case holds by construction.
             key = next(iter(groups), None)
-            self.cache, logits = self._decode(self._tier_views[key],
-                                              self.cache,
-                                              jnp.asarray(self._cur))
+            logits = self._decode_call(self._tier_views[key], self._cur)
             self.tier_counters[key]["decode_calls"] += 1
             last = logits[:, -1, :]
         else:
             last = self._decode_tier_groups(groups)
+        live = sorted(b for g in groups.values() for b in g)
+        if self.chaos is not None and live and self.chaos.fire("nan"):
+            # Chaos: poison one live row's logits; the detector below
+            # must catch it and fail that request alone.
+            bad_row = live[self.chaos.pick(len(live))]
+            last = jnp.asarray(last).at[bad_row].set(jnp.nan)
+        # Always-on poisoned-logits detector: a non-finite logits row
+        # (numerics blow-up, corrupted weights, injected fault) cannot
+        # sample a meaningful token — retire just that request with
+        # error="nan-logits" before sampling; its K/V writes this step
+        # were row-local, so batch neighbours are untouched.
+        bad = np.asarray(jnp.any(
+            ~jnp.isfinite(jnp.asarray(last).astype(jnp.float32)), axis=-1))
+        for b in live:
+            if bad[b]:
+                self.nan_logit_events += 1
+                finished.append(self._retire_abnormal(b, "nan-logits"))
         toks = np.asarray(sampling.sample_tokens(
             last, self._temps, self._top_ks,
             self._keys, self._steps,

@@ -1,0 +1,247 @@
+"""Request lifecycle: cancellation, deadlines, and callback fault
+containment.
+
+The contract: a request leaves the scheduler in exactly one terminal
+state — retired (error None), or failed with ``error`` set to why
+("cancelled", "deadline", a reject reason, "nan-logits", a callback
+traceback) — and EVERY terminal path frees the slot's blocks,
+reservation, and chunk plan exactly like a normal retirement
+(:func:`assert_pool_invariants` holds at any step boundary). A failing
+request never takes the engine or its batch neighbours down with it.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Request, assert_pool_invariants
+
+KEY = jax.random.PRNGKey(0)
+PROMPT_A = (np.arange(8) * 3 + 1) % 64
+PROMPT_B = (np.arange(11) * 5 + 2) % 64
+LONG = (np.arange(40) * 7 + 3) % 64
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_ctx", 64)
+    kw.setdefault("bucket", 16)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_size", 4)
+    return ContinuousScheduler(cfg, params, **kw)
+
+
+def _drain(sched, cap=300):
+    out = []
+    steps = 0
+    while sched.num_active or sched.num_waiting:
+        out.extend(sched.step())
+        steps += 1
+        assert steps < cap, "scheduler failed to drain (deadlock?)"
+    assert_pool_invariants(sched)
+    return out
+
+
+# -- cancellation ----------------------------------------------------------
+
+
+def test_cancel_queued_request(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params, max_batch=1)
+    live = Request(0, PROMPT_A, max_new_tokens=8)
+    queued = Request(1, PROMPT_B, max_new_tokens=8)
+    sched.submit(live)
+    sched.step()                      # rid 0 occupies the only slot
+    sched.submit(queued)
+    assert sched.cancel(1)
+    done = {r.rid: r for r in _drain(sched)}
+    assert done[1].error == "cancelled"
+    assert done[1].out_tokens == []
+    assert done[0].error is None and len(done[0].out_tokens) == 8
+    assert sched.cancellations == 1
+    assert sched.cancel(1) is False   # already terminal
+    assert sched.cancel(99) is False  # never seen
+
+
+def test_cancel_live_request_frees_slot_for_next(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params, max_batch=1)
+    victim = Request(0, PROMPT_A, max_new_tokens=40)
+    sched.submit(victim)
+    for _ in range(4):
+        sched.step()
+    assert sched.cancel(0)
+    nxt = Request(1, PROMPT_B, max_new_tokens=5)
+    sched.submit(nxt)
+    done = {r.rid: r for r in _drain(sched)}
+    assert done[0].error == "cancelled"
+    assert 0 < len(done[0].out_tokens) < 40   # partial output handed back
+    assert done[1].error is None and len(done[1].out_tokens) == 5
+
+
+def test_cancel_mid_chunk_plan(olmo):
+    """Cancelling a request whose chunked-prefill plan is still landing
+    must drop the plan and its reserved blocks (the partially-written
+    blocks never enter the prefix index)."""
+    cfg, params = olmo
+    sched = _sched(cfg, params, chunked_prefill=True, prefill_budget=8,
+                   max_ctx=96)
+    sched.submit(Request(0, LONG, max_new_tokens=4))
+    sched.step()                      # plan enqueued, first chunk landed
+    assert sched.cancel(0)
+    done = _drain(sched)
+    assert done[0].error == "cancelled"
+    assert_pool_invariants(sched)
+    assert sched._avail == sched.pool_blocks
+    # The pool is pristine: a fresh request serves normally.
+    r = Request(1, PROMPT_A, max_new_tokens=4)
+    sched.submit(r)
+    _drain(sched)
+    assert r.error is None and len(r.out_tokens) == 4
+
+
+def test_cancel_from_on_token_callback(olmo):
+    """cancel() is safe to call from inside an on_token callback: it
+    takes effect at the next step boundary."""
+    cfg, params = olmo
+
+    def stop_after_three(req, tok):
+        if len(req.out_tokens or ()) >= 3:
+            sched.cancel(req.rid)
+
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    r = Request(0, PROMPT_A, max_new_tokens=30, on_token=stop_after_three)
+    sched.submit(r)
+    _drain(sched)
+    assert r.error == "cancelled"
+    assert 3 <= len(r.out_tokens) <= 5
+
+
+# -- deadlines -------------------------------------------------------------
+
+
+def test_deadline_steps_live(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    r = Request(0, PROMPT_A, max_new_tokens=50, deadline_steps=5)
+    ok = Request(1, PROMPT_B, max_new_tokens=4)
+    sched.submit(r)
+    sched.submit(ok)
+    done = {q.rid: q for q in _drain(sched)}
+    assert done[0].error == "deadline"
+    assert 0 < len(done[0].out_tokens) < 50
+    assert done[1].error is None and len(done[1].out_tokens) == 4
+    assert sched.deadline_misses == 1
+
+
+def test_deadline_steps_expires_in_queue(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params, max_batch=1)
+    hog = Request(0, PROMPT_A, max_new_tokens=12)
+    starved = Request(1, PROMPT_B, max_new_tokens=4, deadline_steps=2)
+    sched.submit(hog)
+    sched.step()
+    sched.submit(starved)
+    done = {q.rid: q for q in _drain(sched)}
+    assert done[1].error == "deadline"
+    assert done[1].out_tokens == []
+    assert done[0].error is None
+
+
+def test_deadline_wall_clock_via_run(olmo):
+    """deadline_s is wall-clock relative to arrival, evaluated only when
+    run() drives the clock: an already-expired deadline fails immediately,
+    a generous one doesn't fire."""
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    dead = Request(0, PROMPT_A, max_new_tokens=8, deadline_s=0.0)
+    fine = Request(1, PROMPT_B, max_new_tokens=8, deadline_s=60.0)
+    done = {r.rid: r for r in sched.run([dead, fine])}
+    assert done[0].error == "deadline"
+    assert done[1].error is None and len(done[1].out_tokens) == 8
+    assert_pool_invariants(sched)
+
+
+def test_deadline_ignored_without_clock(olmo):
+    """Manual step() loops have no wall clock: deadline_s never fires
+    there (deadline_steps is the deterministic equivalent)."""
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    r = Request(0, PROMPT_A, max_new_tokens=6, deadline_s=0.0)
+    sched.submit(r)
+    _drain(sched)
+    assert r.error is None and len(r.out_tokens) == 6
+
+
+# -- callback fault containment (satellite regression) ---------------------
+
+
+def test_raising_request_callback_fails_only_that_request(olmo):
+    """Regression: an on_token callback that raises used to propagate out
+    of step() and kill the engine loop. It must instead fail that one
+    request (error recorded) while its batch neighbour completes."""
+    cfg, params = olmo
+
+    def boom(req, tok):
+        raise RuntimeError("user callback exploded")
+
+    sched = _sched(cfg, params)
+    bad = Request(0, PROMPT_A, max_new_tokens=8, on_token=boom)
+    good = Request(1, PROMPT_B, max_new_tokens=8)
+    sched.submit(bad)
+    sched.submit(good)
+    done = {r.rid: r for r in _drain(sched)}
+    assert "callback" in done[0].error
+    assert "user callback exploded" in done[0].error
+    assert done[1].error is None and len(done[1].out_tokens) == 8
+    assert sched.callback_errors >= 1
+    assert_pool_invariants(sched)
+
+
+def test_raising_scheduler_callback_survives(olmo):
+    """The engine-level on_token stream hook gets the same containment."""
+    cfg, params = olmo
+    calls = []
+
+    def flaky(req, tok):
+        calls.append(tok)
+        if len(calls) == 2:
+            raise ValueError("stream sink hiccup")
+
+    sched = _sched(cfg, params, on_token=flaky)
+    a = Request(0, PROMPT_A, max_new_tokens=6)
+    b = Request(1, PROMPT_B, max_new_tokens=6)
+    sched.submit(a)
+    sched.submit(b)
+    done = {r.rid: r for r in _drain(sched)}
+    assert sched.callback_errors == 1
+    assert sum(1 for r in done.values() if r.error) == 1
+    assert sum(1 for r in done.values() if r.error is None) == 1
+    assert len(calls) >= 2
+
+
+# -- lifecycle counters surface ---------------------------------------------
+
+
+def test_lifecycle_counters_in_pool_stats(olmo):
+    cfg, params = olmo
+    sched = _sched(cfg, params)
+    sched.submit(Request(0, PROMPT_A, max_new_tokens=4))
+    _drain(sched)
+    stats = sched.pool_stats()
+    for key in ("preemptions", "cancellations", "deadline_misses",
+                "pool_pressure_events", "queue_wait_steps", "head_bypasses",
+                "degraded_requests", "callback_errors", "nan_logit_events",
+                "kernel_fallbacks", "victim_policy", "preempt", "chaos"):
+        assert key in stats, key
+    assert stats["chaos"] is None
+    assert stats["preempt"] is True    # auto-on with the paged pool

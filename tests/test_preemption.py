@@ -1,0 +1,284 @@
+"""Pool-pressure preemption with warm bit-identical resume, victim
+policies, head-of-line bypass, and graceful tier degradation.
+
+The headline contract: a preempted request — its slot released under
+pool pressure, its resident prompt+generated blocks registered in the
+prefix index, itself requeued as ``prompt ++ generated`` — produces
+EXACTLY the token stream of an uninterrupted run, across the bf16 and
+int8 pools, precision tiers, sampling, and self-speculation. Preemption
+must be invisible in the outputs and visible only in the counters.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.quant import QuantConfig
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Request, assert_pool_invariants
+
+KEY = jax.random.PRNGKey(0)
+Q8 = QuantConfig(w_bits=8, a_bits=8)
+P4 = (np.arange(4) * 3 + 2) % 64
+P8 = (np.arange(8) * 3 + 1) % 64
+P11 = (np.arange(11) * 5 + 2) % 64
+P16 = (np.arange(16) * 7 + 3) % 64
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_ctx", 64)
+    kw.setdefault("bucket", 16)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("chunked_prefill", False)
+    return ContinuousScheduler(cfg, params, **kw)
+
+
+def _drain(sched, cap=300):
+    out = []
+    steps = 0
+    while sched.num_active or sched.num_waiting:
+        out.extend(sched.step())
+        steps += 1
+        assert steps < cap, "scheduler failed to drain (deadlock?)"
+    assert_pool_invariants(sched)
+    return out
+
+
+def _solo(cfg, params, req, **kw):
+    """Uninterrupted reference stream: same scheduler settings, a pool
+    big enough that pressure never occurs."""
+    kw.setdefault("pool_blocks", 64)
+    sched = _sched(cfg, params, **kw)
+    sched.submit(req)
+    _drain(sched)
+    assert sched.preemptions == 0
+    return req.out_tokens
+
+
+def _preempt_scenario(cfg, params, *, r1_kw=None, r2_kw=None, **sched_kw):
+    """r1 decodes alone until r2's admission can't fit the pool: r1 is
+    preempted, r2 serves, r1 resumes warm. Returns (sched, r1, r2)."""
+    sched_kw.setdefault("pool_blocks", 10)
+    sched = _sched(cfg, params, **sched_kw)
+    r1 = Request(1, P8, max_new_tokens=12, **(r1_kw or {}))
+    r2 = Request(2, P16, max_new_tokens=8, **(r2_kw or {}))
+    sched.submit(r1)
+    for _ in range(3):
+        sched.step()
+    sched.submit(r2)
+    _drain(sched)
+    assert sched.preemptions >= 1
+    assert r1.preemptions >= 1 and r2.preemptions == 0
+    assert r1.error is None and r2.error is None
+    return sched, r1, r2
+
+
+# -- the bit-identity contract --------------------------------------------
+
+
+@pytest.mark.parametrize("kv_int8", [False, True])
+def test_preempt_resume_bit_identical(olmo, kv_int8):
+    cfg, params = olmo
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_quant=True)
+    sched, r1, r2 = _preempt_scenario(cfg, params)
+    assert r1.out_tokens == _solo(
+        cfg, params, Request(1, P8, max_new_tokens=12))
+    assert r2.out_tokens == _solo(
+        cfg, params, Request(2, P16, max_new_tokens=8))
+    # The resume was warm: re-admission hit the blocks preemption
+    # registered (the whole prompt at minimum).
+    assert sched.pool_stats()["prefix_hit_tokens"] >= len(P8)
+
+
+def test_preempt_resume_bit_identical_sampled(olmo):
+    """Sampling survives interruption too: the per-request PRNG is a pure
+    function of (seed, rid, step index), and the resume re-enters at
+    step index = tokens already emitted."""
+    cfg, params = olmo
+    _, r1, _ = _preempt_scenario(
+        cfg, params, r1_kw=dict(temperature=0.8, top_k=8))
+    assert r1.out_tokens == _solo(
+        cfg, params, Request(1, P8, max_new_tokens=12,
+                             temperature=0.8, top_k=8))
+
+
+def test_preempt_resume_bit_identical_tiers(olmo):
+    cfg, params = olmo
+    kw = dict(quant=Q8, tiers="w8a8,w4a8")
+    sched, r1, r2 = _preempt_scenario(
+        cfg, params, r1_kw=dict(tier="w8a8"), r2_kw=dict(tier="w4a8"), **kw)
+    assert r1.degraded_to is None          # preemption never degrades
+    assert r1.out_tokens == _solo(
+        cfg, params, Request(1, P8, max_new_tokens=12, tier="w8a8"), **kw)
+    assert r2.out_tokens == _solo(
+        cfg, params, Request(2, P16, max_new_tokens=8, tier="w4a8"), **kw)
+
+
+def test_preempt_resume_bit_identical_speculative(olmo):
+    cfg, params = olmo
+    kw = dict(quant=Q8, speculate=2, draft_policy="w4a8")
+    sched, r1, r2 = _preempt_scenario(cfg, params, **kw)
+    # Contract is transitive: spec == non-spec == uninterrupted.
+    assert r1.out_tokens == _solo(
+        cfg, params, Request(1, P8, max_new_tokens=12), quant=Q8)
+    assert r2.out_tokens == _solo(
+        cfg, params, Request(2, P16, max_new_tokens=8), quant=Q8)
+
+
+def test_preempted_twice_never(olmo):
+    """Anti-thrash: a request that has already been preempted is never
+    chosen to make room again — it waits instead."""
+    cfg, params = olmo
+    sched, r1, _ = _preempt_scenario(cfg, params)
+    assert r1.preemptions == 1
+    assert sched.preemptions == 1
+
+
+# -- victim policies -------------------------------------------------------
+
+
+def _two_live_plus_head(cfg, params, head_kw=None, r1_kw=None, r2_kw=None,
+                        **sched_kw):
+    """Rows 1 (5+ blocks) and 2 (3 blocks) live; request 3 needs more
+    than the remaining pool, forcing a victim choice between them."""
+    sched_kw.setdefault("max_batch", 3)
+    sched_kw.setdefault("pool_blocks", 12)
+    sched = _sched(cfg, params, **sched_kw)
+    r1 = Request(1, P11, max_new_tokens=12, **(r1_kw or {}))
+    r2 = Request(2, P8, max_new_tokens=4, **(r2_kw or {}))
+    sched.submit(r1)
+    sched.submit(r2)
+    sched.step()
+    r3 = Request(3, P16, max_new_tokens=8, **(head_kw or {}))
+    sched.submit(r3)
+    _drain(sched)
+    assert all(r.error is None for r in (r1, r2, r3))
+    return sched, r1, r2, r3
+
+
+def test_victim_policy_most_blocks(olmo):
+    cfg, params = olmo
+    sched, r1, r2, _ = _two_live_plus_head(cfg, params,
+                                           victim_policy="most-blocks")
+    assert r1.preemptions == 1 and r2.preemptions == 0
+
+
+def test_victim_policy_lowest_tier(olmo):
+    """lowest-tier evicts the cheapest-precision slot (least recompute
+    cost) even though the other frees more blocks."""
+    cfg, params = olmo
+    sched, r1, r2, _ = _two_live_plus_head(
+        cfg, params, victim_policy="lowest-tier",
+        quant=Q8, tiers="w8a8,w2a8",
+        r1_kw=dict(tier="w8a8"), r2_kw=dict(tier="w2a8"),
+        head_kw=dict(tier="w8a8"))
+    assert r2.preemptions == 1 and r1.preemptions == 0
+
+
+def test_victim_policy_latest_deadline(olmo):
+    """latest-deadline evicts the slot with the most slack: a request
+    with no deadline outranks one racing a step budget."""
+    cfg, params = olmo
+    sched, r1, r2, _ = _two_live_plus_head(
+        cfg, params, victim_policy="latest-deadline",
+        r1_kw=dict(deadline_steps=60))
+    assert r2.preemptions == 1 and r1.preemptions == 0
+
+
+def test_bad_victim_policy_rejected(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="victim_policy"):
+        _sched(cfg, params, victim_policy="coin-flip")
+
+
+def test_preempt_requires_paged_pool(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="preempt"):
+        _sched(cfg, params, paged=False, preempt=True)
+
+
+# -- head-of-line bypass & starvation freedom ------------------------------
+
+
+def test_bounded_bypass_is_starvation_free(olmo):
+    """With preemption off, a pool-blocked big head lets smaller arrivals
+    through — but only max_head_bypass consecutive times, so the head
+    admits (and finishes) once capacity frees instead of starving behind
+    an endless small stream."""
+    cfg, params = olmo
+    admitted = []                     # first-token emission == admission
+
+    def first_seen(req, tok):
+        if req.rid not in admitted:
+            admitted.append(req.rid)
+
+    sched = _sched(cfg, params, pool_blocks=8, preempt=False,
+                   max_head_bypass=2, on_token=first_seen)
+    hog = Request(0, P8, max_new_tokens=20)
+    sched.submit(hog)
+    sched.step()
+    big = Request(1, P16, max_new_tokens=4)
+    smalls = [Request(10 + i, P4 + i, max_new_tokens=1) for i in range(4)]
+    sched.submit(big)
+    for s in smalls:
+        sched.submit(s)
+    done = _drain(sched)
+    assert all(r.error is None for r in done)
+    stats = sched.pool_stats()
+    assert stats["preemptions"] == 0          # preempt=False honoured
+    assert stats["pool_pressure_events"] > 0
+    assert stats["queue_wait_steps"] > 0
+    assert stats["head_bypasses"] == 2        # the bound, not the stream
+    # Exactly the bounded number of smalls were ADMITTED past the blocked
+    # head; the rest waited their FIFO turn behind it.
+    assert admitted.index(10) < admitted.index(1)
+    assert admitted.index(11) < admitted.index(1)
+    assert admitted.index(1) < admitted.index(12)
+    assert admitted.index(1) < admitted.index(13)
+
+
+# -- graceful degradation --------------------------------------------------
+
+
+def test_degrade_under_sustained_pressure(olmo):
+    """--degrade: after degrade_after consecutive pressure steps, new
+    admissions are pinned (for life) to the cheapest tier — and the
+    degraded stream is bitwise the solo run of that tier."""
+    cfg, params = olmo
+    kw = dict(quant=Q8, tiers="w8a8,w2a8")
+    sched = _sched(cfg, params, pool_blocks=8, preempt=False,
+                   degrade=True, degrade_after=1, **kw)
+    hog = Request(0, P11, max_new_tokens=10, tier="w8a8")
+    sched.submit(hog)
+    sched.step()
+    late = Request(1, P16, max_new_tokens=6, tier="w8a8")
+    sched.submit(late)
+    _drain(sched)
+    assert late.error is None
+    assert late.degraded_to == "w2a8"
+    assert hog.degraded_to is None
+    assert sched.degraded_requests == 1
+    low = _solo(cfg, params,
+                Request(1, P16, max_new_tokens=6, tier="w2a8"), **kw)
+    asked = _solo(cfg, params,
+                  Request(1, P16, max_new_tokens=6, tier="w8a8"), **kw)
+    assert late.out_tokens == low
+    assert late.out_tokens != asked   # the degradation is real
+
+
+def test_degrade_requires_tiers(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="degrade"):
+        _sched(cfg, params, degrade=True)

@@ -17,7 +17,12 @@ import pytest
 
 from repro.configs import get_reduced_config
 from repro.models import build_model
-from repro.serving import ContinuousScheduler, Request, ServingEngine
+from repro.serving import (
+    ContinuousScheduler,
+    Request,
+    ServingEngine,
+    assert_pool_invariants,
+)
 
 KEY = jax.random.PRNGKey(0)
 SYS = np.arange(10) % 64                       # shared prefix, 10 tokens
@@ -45,6 +50,7 @@ def _drain(sched):
     out = []
     while sched.num_active or sched.num_waiting:
         out.extend(sched.step())
+    assert_pool_invariants(sched)
     return out
 
 
@@ -64,11 +70,12 @@ def _sched(cfg, params, **kw):
 
 
 def _assert_drained_invariants(sched):
-    """After every request retires: no live blocks, no dangling refcounts,
-    no duplicate free-list entries, full capacity available again."""
+    """The shared structural checker, plus what only holds once every
+    request has retired: no live blocks, no refcounts outstanding, full
+    capacity available again."""
+    assert_pool_invariants(sched)
     assert sched._live_blocks == 0
-    assert (sched._refcnt >= 0).all() and sched._refcnt[1:].sum() == 0
-    assert len(set(sched._free)) == len(sched._free)
+    assert sched._refcnt[1:].sum() == 0
     assert len(sched._free) + len(sched._lru) == sched.pool_blocks
     assert sched._avail == sched.pool_blocks
     assert (sched._block_tab == -1).all()
@@ -221,7 +228,8 @@ def test_eviction_races_reservation(olmo):
     assert stats["prefix_hit_blocks"] >= 2
     assert not b.failed and b.out_tokens == ref_b[1]
     assert a.out_tokens == ref_a[0]
-    assert len(sched._prefix_index) == len(sched._block_hash)
+    assert len(sched._prefix_index) == sum(
+        len(hs) for hs in sched._block_hash.values())
     _assert_drained_invariants(sched)
 
 
@@ -260,3 +268,34 @@ def test_pool_stats_counters(olmo):
     assert stats["prefix_hit_tokens"] >= len(PROMPT_A)
     assert 0.0 < stats["prefix_hit_rate"] <= 1.0
     assert stats["prompt_tokens"] == 2 * len(PROMPT_A)
+
+
+# --------------------------------------------------------------------------
+# Decode-generated blocks are cached too (multi-turn warm re-admission)
+# --------------------------------------------------------------------------
+
+
+def test_multi_turn_resubmission_is_warm(olmo):
+    """Retirement registers the blocks holding decode-GENERATED tokens,
+    not just the prompt's: a follow-up turn whose prompt is the prior
+    conversation (prompt ++ answer ++ new user tokens) hits past the
+    original prompt into the generated blocks, and its output is bitwise
+    the cold run of the same concatenated prompt."""
+    cfg, params = olmo
+    first = Request(0, PROMPT_A, max_new_tokens=9)
+    sched = _sched(cfg, params, pool_blocks=24, max_ctx=64)
+    sched.run([first])
+    hits0 = sched.pool_stats()["prefix_hit_tokens"]
+
+    turn2 = np.concatenate([PROMPT_A, first.out_tokens, [5, 13]])
+    ref = _cold(cfg, params, [Request(1, turn2, max_new_tokens=6)])
+    r = Request(1, turn2, max_new_tokens=6)
+    sched.run([r])
+    assert r.out_tokens == ref[1]
+    # Warm past the original prompt: everything the first turn wrote
+    # (prompt + all but the last generated token) is resident.
+    pos = len(PROMPT_A) + len(first.out_tokens) - 1
+    bs = sched.block_size
+    assert sched.pool_stats()["prefix_hit_tokens"] - hits0 >= (
+        pos // bs) * bs > len(PROMPT_A)
+    _assert_drained_invariants(sched)

@@ -27,7 +27,7 @@ from repro.core.quant import QuantConfig
 from repro.core.quantized_linear import PackedWeight, quantize_params_for_serving
 from repro.kernels import ops, ref
 from repro.models import build_model
-from repro.serving import ContinuousScheduler, Request
+from repro.serving import ContinuousScheduler, Request, assert_pool_invariants
 from repro.serving.speculative import (
     derive_draft_params,
     greedy_accept,
@@ -61,6 +61,7 @@ def _drain(sched):
     out = []
     while sched.num_active or sched.num_waiting:
         out.extend(sched.step())
+    assert_pool_invariants(sched)
     return out
 
 

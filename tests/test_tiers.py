@@ -30,7 +30,7 @@ from repro.core.precision import (
 from repro.core.quant import QuantConfig
 from repro.core.quantized_linear import PackedWeight, quantize_params_for_serving
 from repro.models import build_model
-from repro.serving import ContinuousScheduler, Request
+from repro.serving import ContinuousScheduler, Request, assert_pool_invariants
 
 KEY = jax.random.PRNGKey(0)
 BS = 4
@@ -61,6 +61,7 @@ def _drain(sched):
     out = []
     while sched.num_active or sched.num_waiting:
         out.extend(sched.step())
+    assert_pool_invariants(sched)
     return out
 
 
