@@ -22,6 +22,7 @@ from benchmarks import (
     roofline_table,
     serving_bench,
     spec_bench,
+    swap_bench,
     table3_intralayer,
     tier_bench,
 )
@@ -39,6 +40,7 @@ MODULES = {
     "serving": serving_bench,
     "prefix": prefix_bench,
     "spec": spec_bench,
+    "swap": swap_bench,
     "tiers": tier_bench,
     "chaos": chaos_bench,
 }

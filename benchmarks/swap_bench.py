@@ -1,0 +1,171 @@
+"""Host-RAM spill-tier benchmark: repeat-prefix traffic on a small pool.
+
+The capacity story behind ROADMAP item 4: a device pool sized to a
+fraction of the working set (the M4BRAM/FINN framing — the paged pool is
+the BRAM/HBM working set, the host store the capacity behind it) serving
+multi-turn-style traffic where every conversation comes back. Several
+distinct conversations (each with its OWN long history prefix + a short
+turn tail, so nothing stays hot by being shared) are served in rounds
+through ONE scheduler; by the time a conversation returns, the pool has
+churned its blocks out. The same
+workload runs twice:
+
+  * host tier ON  — evicted refcount-0 blocks spill to the pinned host
+    store and swap back into free device slots on the return visit:
+    repeat admissions prefill (almost) nothing.
+  * host tier OFF (--no-host-pool equivalent) — eviction is death; every
+    return visit re-prefills the full prompt through the device pool.
+
+Reported per mode: prefill tokens actually computed on the return
+rounds (the deterministic compute metric — interpret-mode wall time is
+not a perf signal), wall time, and for the ON mode the host-tier hit
+rate and swap counters. The ON mode must recompute strictly fewer
+prefill tokens, its host hit rate must be > 0, and its outputs must be
+greedy bit-identical to the OFF mode's — asserted in-run, so `--quick`
+doubles as the CI host-tier smoke.
+
+Writes BENCH_swap.json at the repo root (full mode only).
+
+Run:  PYTHONPATH=src python -m benchmarks.swap_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+
+import jax
+import numpy as np
+
+
+SYS_LEN = 40          # per-conversation history (10 blocks at block_size 4)
+TAIL_LEN = 4          # turn tail
+MAX_NEW = 4
+BLOCK = 4
+POOL_BLOCKS = 28      # a ~40% slice of the full-run working set
+HOST_BYTES = 64 << 20
+
+
+def _conversations(n, vocab):
+    from repro.serving import Request
+
+    rng = np.random.default_rng(0)
+    histories = [rng.integers(0, vocab, SYS_LEN) for _ in range(n)]
+    tails = [rng.integers(0, vocab, TAIL_LEN) for _ in range(n)]
+
+    def round_reqs(rnd):
+        return [Request(rid=rnd * n + i,
+                        prompt=np.concatenate([histories[i], tails[i]]),
+                        max_new_tokens=MAX_NEW)
+                for i in range(n)]
+
+    return round_reqs
+
+
+def run(quick: bool = False) -> dict:
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.serving import ContinuousScheduler, assert_pool_invariants
+
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    n = 4 if quick else 6
+    rounds = 2 if quick else 3
+    round_reqs = _conversations(n, cfg.vocab)
+
+    results, tokens = {}, {}
+    for mode, host_bytes in (("host_on", HOST_BYTES), ("host_off", 0)):
+        sched = ContinuousScheduler(
+            cfg, params, max_batch=2, max_ctx=64, bucket=8,
+            paged=True, block_size=BLOCK, pool_blocks=POOL_BLOCKS,
+            host_pool_bytes=host_bytes,
+        )
+        sched.run(round_reqs(0))            # round 0: everyone cold (+jit)
+        base = sched.pool_stats()["prefill_tokens_computed"]
+        out = {}
+        t0 = time.perf_counter()
+        for rnd in range(1, rounds):        # return visits: the contest
+            for r in sched.run(round_reqs(rnd)):
+                out[r.rid] = list(r.out_tokens)
+            assert_pool_invariants(sched)
+        wall = time.perf_counter() - t0
+        stats = sched.pool_stats()
+        tokens[mode] = out
+        results[mode] = {
+            "wall_s": round(wall, 4),
+            "return_prefill_tokens": int(
+                stats["prefill_tokens_computed"] - base),
+            "peak_live_blocks": stats["peak_allocated_blocks"],
+        }
+        if host_bytes:
+            results[mode].update(
+                host_hit_rate=round(stats["host_hit_rate"], 3),
+                host_hit_blocks=stats["host_hit_blocks"],
+                swap_ins=stats["swap_ins"],
+                swap_outs=stats["swap_outs"],
+                host_blocks=stats["host_blocks"],
+                host_bytes=stats["host_bytes"],
+            )
+        emit(f"swap/{mode}", results[mode]["wall_s"] * 1e6,
+             f"return_prefill_tokens="
+             f"{results[mode]['return_prefill_tokens']}")
+
+    on, off = results["host_on"], results["host_off"]
+    assert tokens["host_on"] == tokens["host_off"], \
+        "warm-from-host outputs diverged from cold outputs"
+    assert on["host_hit_rate"] > 0, \
+        "return visits never hit the host tier — pool not under pressure?"
+    assert on["swap_ins"] > 0 and on["swap_outs"] > 0
+    assert on["return_prefill_tokens"] < off["return_prefill_tokens"], (
+        f"host tier saved no prefill compute: "
+        f"{on['return_prefill_tokens']} vs {off['return_prefill_tokens']}")
+    summary = {
+        "pool_fraction_of_working_set": round(
+            POOL_BLOCKS / (n * -(-(SYS_LEN + TAIL_LEN) // BLOCK)), 2),
+        "return_prefill_tokens_ratio": round(
+            off["return_prefill_tokens"]
+            / max(on["return_prefill_tokens"], 1), 2),
+        "host_hit_rate": on["host_hit_rate"],
+        "swap_ins": on["swap_ins"],
+        "swap_outs": on["swap_outs"],
+        "bit_identical": True,
+    }
+    emit("swap/summary", 0.0,
+         f"prefill_tokens_ratio={summary['return_prefill_tokens_ratio']} "
+         f"host_hit_rate={summary['host_hit_rate']} "
+         f"swap_ins={summary['swap_ins']}")
+
+    if quick:
+        return summary
+    bench_path = Path(__file__).resolve().parents[1] / "BENCH_swap.json"
+    bench_path.write_text(json.dumps({
+        "note": ("reduced olmo-1b on CPU; repeat-prefix rounds over a "
+                 f"device pool holding {POOL_BLOCKS} blocks (~"
+                 f"{int(100 * summary['pool_fraction_of_working_set'])}% "
+                 "of the working set); host_on spills evicted blocks to "
+                 "the pinned host store and swaps them back on return "
+                 "visits, host_off re-prefills cold; outputs asserted "
+                 "greedy bit-identical between the modes"),
+        "config": {"conversations": n, "rounds": rounds, "max_batch": 2,
+                   "block_size": BLOCK, "pool_blocks": POOL_BLOCKS,
+                   "sys_prompt_tokens": SYS_LEN, "tail_tokens": TAIL_LEN,
+                   "max_new_tokens": MAX_NEW, "host_pool_bytes": HOST_BYTES},
+        "modes": results,
+        "summary": summary,
+    }, indent=2) + "\n")
+    print(f"wrote {bench_path}")
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

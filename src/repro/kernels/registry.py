@@ -428,15 +428,36 @@ class KernelRegistry:
     def load_plans(self, path) -> int:
         """Merge plans from a `save_plans` JSON file into the cache
         (loaded plans overwrite heuristic entries, like `record_plan`).
-        Returns the number of plans loaded."""
-        obj = json.loads(Path(path).read_text())
-        if obj.get("version") != 1:
-            raise ValueError(f"unsupported plan-cache version in {path!s}: "
-                             f"{obj.get('version')!r}")
-        for e in obj["plans"]:
-            key = (e["op"], e["backend"], tuple(int(x) for x in e["shape"]))
-            self._plans[key] = tuple(int(x) for x in e["blocks"])
-        return len(obj["plans"])
+        Returns the number of plans loaded. NEVER raises on bad input —
+        a missing, truncated, or corrupt file and an unsupported schema
+        version each warn and load 0 plans, because a stale cache must
+        not take down a process that can simply re-autotune (the same
+        cold-start contract as the serving prefix index)."""
+        import warnings
+
+        try:
+            obj = json.loads(Path(path).read_text())
+        except (OSError, ValueError) as e:
+            warnings.warn(f"plan-cache load from {path!s} failed ({e}) — "
+                          "cold start")
+            return 0
+        if not isinstance(obj, dict) or obj.get("version") != 1:
+            got = obj.get("version") if isinstance(obj, dict) else None
+            warnings.warn(f"unsupported plan-cache version in {path!s}: "
+                          f"{got!r} — cold start")
+            return 0
+        loaded = {}
+        try:
+            for e in obj["plans"]:
+                key = (e["op"], e["backend"],
+                       tuple(int(x) for x in e["shape"]))
+                loaded[key] = tuple(int(x) for x in e["blocks"])
+        except (KeyError, TypeError, ValueError) as e:
+            warnings.warn(f"corrupt plan-cache entry in {path!s} ({e}) — "
+                          "cold start")
+            return 0
+        self._plans.update(loaded)
+        return len(loaded)
 
 
 _REGISTRY = KernelRegistry()

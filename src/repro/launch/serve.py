@@ -82,6 +82,20 @@ degrading one request or one call; the chaos report prints what fired.
 --plans FILE persists the kernel registry's block-plan cache (autotune
 winners, e.g. the paged-attention bh knob) across process restarts:
 loaded before serving if the file exists, written back on exit.
+
+Tiered block pool: --host-pool-bytes N arms a host-RAM spill tier under
+the paged pool — refcount-0 cached blocks evicted under pool pressure
+move to a pinned numpy store instead of dying, and a prefix hit on a
+host-resident chain swaps the blocks back into free device slots before
+admission (warm-from-host greedy streams are bitwise the cold streams).
+--victim-policy block-to-host makes preemption spill the victim's
+resident K/V to host too, so it resumes warm even after its device
+blocks were reclaimed. --index FILE persists the prefix index itself
+(digest chains + block bytes, versioned JSON) across process restarts,
+mirroring --plans: loaded before serving if the file exists, written
+back on exit — a restarted server serves repeat prefixes warm from
+host instead of re-prefilling cold. Swap/host-hit counters are
+reported after a continuous run.
 """
 import argparse
 
@@ -159,8 +173,11 @@ def main():
                          "pool, resume warm from prefix-cached blocks)")
     ap.add_argument("--victim-policy", default="most-blocks",
                     choices=("most-blocks", "lowest-tier",
-                             "latest-deadline"),
-                    help="which live slot pool-pressure preemption evicts")
+                             "latest-deadline", "block-to-host"),
+                    help="which live slot pool-pressure preemption evicts "
+                         "(block-to-host picks like most-blocks and spills "
+                         "the victim's resident K/V to the host tier; "
+                         "needs --host-pool-bytes)")
     ap.add_argument("--degrade", action="store_true",
                     help="under sustained pool pressure admit new "
                          "requests at the lowest precision tier "
@@ -179,7 +196,24 @@ def main():
     ap.add_argument("--plans", default=None,
                     help="block-plan cache JSON: loaded at startup if it "
                          "exists, saved back (with any new plans) on exit")
+    ap.add_argument("--host-pool-bytes", type=int, default=0,
+                    help="host-RAM spill tier budget in bytes (0 = off): "
+                         "evicted refcount-0 prefix blocks move to a "
+                         "pinned host store and swap back bit-identically "
+                         "on a prefix hit")
+    ap.add_argument("--index", default=None,
+                    help="prefix-index JSON (digest chains + block bytes): "
+                         "loaded into the host tier at startup if it "
+                         "exists, saved back on exit (needs "
+                         "--host-pool-bytes)")
     args = ap.parse_args()
+
+    if args.index and not args.host_pool_bytes:
+        raise SystemExit("--index persists blocks into the host tier; "
+                         "add --host-pool-bytes")
+    if args.victim_policy == "block-to-host" and not args.host_pool_bytes:
+        raise SystemExit("--victim-policy block-to-host spills to the host "
+                         "tier; add --host-pool-bytes")
 
     if args.quant and args.policy:
         raise SystemExit("--quant and --policy are mutually exclusive")
@@ -271,7 +305,14 @@ def main():
                            preempt=args.preempt,
                            victim_policy=args.victim_policy,
                            degrade=args.degrade,
-                           chaos=chaos)
+                           chaos=chaos,
+                           host_pool_bytes=args.host_pool_bytes)
+    if args.index:
+        import os
+
+        if os.path.exists(args.index):
+            n = engine.load_index(args.index)
+            print(f"loaded {n} prefix digests from {args.index}")
 
     def make_requests():
         # Self-contained stream: every call reproduces the exact same
@@ -335,6 +376,16 @@ def main():
                       f"{stats['cow_copies']} CoW copies, "
                       f"{stats['prefix_evictions']} evictions, "
                       f"{stats['retained_prefix_blocks']} retained)")
+            if stats.get("host_tier"):
+                print(f"  host tier: {stats['host_hit_rate']:.0%} of "
+                      f"prompt tokens served warm-from-host "
+                      f"({stats['host_hit_blocks']} block hits, "
+                      f"{stats['swap_outs']} swap-outs, "
+                      f"{stats['swap_ins']} swap-ins, "
+                      f"{stats['host_blocks']} resident / "
+                      f"{stats['host_bytes']/1e6:.2f} MB of "
+                      f"{stats['host_pool_bytes']/1e6:.2f} MB budget, "
+                      f"{stats['host_evictions']} host evictions)")
             if stats.get("chunked_prefill"):
                 print(f"  chunked prefill: {stats['prefill_chunks_run']} "
                       f"chunks (budget={stats['prefill_budget']}), "
@@ -397,6 +448,9 @@ def main():
     if args.plans:
         n = get_registry().save_plans(args.plans)
         print(f"saved {n} block plans to {args.plans}")
+    if args.index:
+        n = engine.save_index(args.index)
+        print(f"saved {n} prefix digests to {args.index}")
 
 
 if __name__ == "__main__":

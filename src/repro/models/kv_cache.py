@@ -667,6 +667,32 @@ def copy_pool_block(cache: DecodeCache, src, dst) -> DecodeCache:
         kv, k=k, v=v, k_scale=ks, v_scale=vs))
 
 
+def write_pool_block(cache: DecodeCache, dst, k, v,
+                     k_scale=None, v_scale=None) -> DecodeCache:
+    """Write one block's worth of K/V bytes into pool block `dst` across
+    every layer — the swap-in half of the host-RAM block tier. `k`/`v`
+    are (L, block_size, NKV, H) arrays in the pool's dtype (int8 codes
+    for a quantized pool, with the fp32 `k_scale`/`v_scale` planes
+    (L, block_size, NKV, 1) alongside); they round-trip device → pinned
+    host numpy → device verbatim, which is what makes a warm-from-host
+    admission bitwise identical to the blocks' original residency.
+
+    `dst` may be a traced scalar — one compiled write serves every
+    destination block."""
+    kv: PagedKVCache = cache.kv
+    dst = jnp.asarray(dst, jnp.int32)
+    kk = kv.k.at[:, dst].set(jnp.asarray(k, kv.k.dtype))
+    vv = kv.v.at[:, dst].set(jnp.asarray(v, kv.v.dtype))
+    ks = vs = None
+    if kv.quantized:
+        ks = kv.k_scale.at[:, dst].set(
+            jnp.asarray(k_scale, kv.k_scale.dtype))
+        vs = kv.v_scale.at[:, dst].set(
+            jnp.asarray(v_scale, kv.v_scale.dtype))
+    return dataclasses.replace(cache, kv=dataclasses.replace(
+        kv, k=kk, v=vv, k_scale=ks, v_scale=vs))
+
+
 def grow_cache(cache: DecodeCache, size: int) -> DecodeCache:
     """Extend a full-attention contiguous cache's slot axis to at least
     `size` empty slots (ring buffers and recurrent states are position-

@@ -85,6 +85,7 @@ class ServingEngine:
         degrade: bool = False,
         degrade_after: int = 2,
         chaos=None,
+        host_pool_bytes: int = 0,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -113,6 +114,8 @@ class ServingEngine:
         self.degrade = degrade              # admit at floor tier under pressure
         self.degrade_after = degrade_after
         self.chaos = chaos                  # FaultInjector (tests/chaos runs)
+        self.host_pool_bytes = host_pool_bytes  # host-RAM spill tier budget
+        self._index_data = None             # deferred load_index payload
         self._sched: Optional[ContinuousScheduler] = None
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
@@ -142,6 +145,16 @@ class ServingEngine:
         else:
             need = max_ctx or 128
         if self._sched is None or need > self._sched.max_ctx:
+            # Carry the prefix index across the rebuild: a deferred
+            # `load_index` payload seeds the first scheduler; on a
+            # max_ctx-growth rebuild the OLD scheduler's live index (its
+            # snapshot covers hashed device blocks and the host store) is
+            # fresher and wins. Block geometry is max_ctx-independent, so
+            # the snapshot imports cleanly into the grown pool.
+            carry = self._index_data
+            self._index_data = None
+            if self._sched is not None and self._sched.host_tier:
+                carry = self._sched.export_index()
             self._sched = ContinuousScheduler(
                 self.cfg, self.params, max_batch=self.max_batch,
                 max_ctx=need, quant=None, bucket=self.bucket, seed=self.seed,
@@ -159,7 +172,10 @@ class ServingEngine:
                 degrade=self.degrade,
                 degrade_after=self.degrade_after,
                 chaos=self.chaos,
+                host_pool_bytes=self.host_pool_bytes,
             )
+            if carry:
+                self._sched.import_index(carry)
         self._sched.on_token = self.on_token  # pick up late reassignment
         return self._sched
 
@@ -174,6 +190,48 @@ class ServingEngine:
         retired; True means the request will come back with
         ``error="cancelled"`` at the next step boundary."""
         return self._sched.cancel(rid) if self._sched is not None else False
+
+    # -- durable prefix index (host-tier persistence) ------------------------
+
+    def save_index(self, path) -> int:
+        """Persist the scheduler's prefix index (device + host tiers) to
+        `path` as JSON. Returns the number of digests written; 0 when no
+        scheduler has been built yet and nothing was loaded."""
+        if self._sched is not None:
+            return self._sched.save_index(path)
+        if self._index_data:
+            import json
+            with open(path, "w") as f:
+                json.dump(self._index_data, f)
+                f.write("\n")
+            return len(self._index_data.get("digests", {}))
+        return 0
+
+    def load_index(self, path) -> int:
+        """Load a `save_index` file. With a live scheduler the snapshot
+        is imported into its host tier immediately; before the first
+        `generate` the parsed payload is stashed and imported when the
+        scheduler is built (returning the digest count found in the
+        file). Missing/corrupt files warn and cold-start with 0 — the
+        same never-crash contract as `--plans`."""
+        if self._sched is not None:
+            return self._sched.load_index(path)
+        import json
+        import warnings
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError) as e:
+            warnings.warn(f"prefix-index load from {path!s} failed ({e}) "
+                          "— cold start")
+            return 0
+        if not isinstance(data, dict):
+            warnings.warn("prefix-index load: unrecognized payload — "
+                          "cold start")
+            return 0
+        self._index_data = data
+        digests = data.get("digests")
+        return len(digests) if isinstance(digests, dict) else 0
 
     def _ctx_needed(self, requests: List[Request]) -> int:
         return max(self._bucketed(len(r.prompt)) + max(r.max_new_tokens, 1)

@@ -20,7 +20,13 @@ by the allocator at all times:
     leaves both maps;
   * reservation accounting: ``_avail`` (what admission may still promise)
     equals free + LRU-reclaimable minus outstanding reservations, is
-    never negative, and empty rows hold no reservation and no blocks.
+    never negative, and empty rows hold no reservation and no blocks;
+  * host tier: ``_host_index`` (hash -> host entry) and each host
+    entry's digest set are exact inverses, no digest resolves to BOTH a
+    device block and a host copy (exclusivity — a hit must have exactly
+    one source of truth), ``host_bytes`` equals the sum of resident
+    entry sizes and never exceeds ``host_pool_bytes``, and a disabled
+    tier holds nothing.
 """
 from __future__ import annotations
 
@@ -82,3 +88,31 @@ def assert_pool_invariants(sched) -> None:
         f"_avail drift: {sched._avail} != {len(free)} free + {len(lru)} LRU "
         f"- {int(sched._reserved.sum())} reserved")
     assert sched._avail >= 0, "negative available-capacity accounting"
+
+    # -- host-RAM spill tier -------------------------------------------------
+    store = getattr(sched, "_host_store", None)
+    if store is None:
+        return
+    if not getattr(sched, "host_tier", False):
+        assert not store and not sched._host_index and not sched.host_bytes, (
+            "host tier disabled but host state is non-empty")
+        return
+    for hid, entry in store.items():
+        assert entry.digests, f"host entry {hid} holds an empty digest set"
+        for h in entry.digests:
+            assert sched._host_index.get(h) == hid, (
+                f"digest on host entry {hid} not indexed back to it")
+            assert h not in sched._prefix_index, (
+                f"digest resolves to both device block "
+                f"{sched._prefix_index.get(h)} and host entry {hid}")
+    assert len(sched._host_index) == sum(
+        len(e.digests) for e in store.values()), (
+        "host index / host store digest-count mismatch")
+    for h, hid in sched._host_index.items():
+        assert hid in store, f"host index points at evicted entry {hid}"
+    got = sum(e.nbytes for e in store.values())
+    assert sched.host_bytes == got, (
+        f"host_bytes drift: tracked {sched.host_bytes} != resident {got}")
+    assert sched.host_bytes <= sched.host_pool_bytes, (
+        f"host tier over budget: {sched.host_bytes} > "
+        f"{sched.host_pool_bytes}")

@@ -71,10 +71,13 @@ Poisson arrivals for the continuous-serving benchmark).
 """
 from __future__ import annotations
 
+import base64
 import collections
 import dataclasses
 import hashlib
+import json
 import time
+import warnings
 from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -103,6 +106,7 @@ from repro.models.kv_cache import (
     scatter_suffix_into_paged,
     set_decode_positions,
     set_paged_row,
+    write_pool_block,
 )
 from repro.serving import sampling
 from repro.serving.chaos import FaultInjector, InjectedFault
@@ -122,8 +126,34 @@ def _contig_headroom() -> int:
 #: Preemption victim-selection policies: `most-blocks` frees the most pool
 #: capacity per eviction, `lowest-tier` sheds the cheapest quality class
 #: first, `latest-deadline` preempts the request with the most slack
-#: (no-deadline requests first, then the latest deadline).
-VICTIM_POLICIES = ("most-blocks", "lowest-tier", "latest-deadline")
+#: (no-deadline requests first, then the latest deadline). `block-to-host`
+#: selects like `most-blocks` but spills the victim's resident K/V blocks
+#: to the host-RAM tier (needs ``host_pool_bytes``), so the requeued
+#: victim resumes warm-from-host even when pool churn would have evicted
+#: its blocks cold before re-admission.
+VICTIM_POLICIES = ("most-blocks", "lowest-tier", "latest-deadline",
+                   "block-to-host")
+
+#: Versioned schema tag of the persisted prefix index (`save_index`).
+INDEX_SCHEMA = "m4bram-prefix-index"
+INDEX_VERSION = 1
+
+
+@dataclasses.dataclass
+class _HostBlock:
+    """One pool block's K/V bytes parked in the host-RAM tier: plain
+    numpy copies of the device planes (int8 codes + fp32 scale planes
+    for a quantized pool) plus the digests that can claim it. The bytes
+    are immutable — they were frozen device-side the moment a digest was
+    registered — so swap-back (`write_pool_block`) reproduces the block
+    verbatim and warm-from-host streams stay bitwise cold-identical."""
+
+    k: np.ndarray                        # (L, block_size, NKV, H)
+    v: np.ndarray
+    k_scale: Optional[np.ndarray]        # (L, block_size, NKV, 1) fp32
+    v_scale: Optional[np.ndarray]
+    digests: set                         # chain digests resolving to it
+    nbytes: int
 
 
 @dataclasses.dataclass
@@ -225,6 +255,7 @@ class ContinuousScheduler:
         degrade: bool = False,
         degrade_after: int = 2,
         chaos: Optional[FaultInjector] = None,
+        host_pool_bytes: int = 0,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -414,6 +445,43 @@ class ContinuousScheduler:
                 f"unknown victim_policy {victim_policy!r}; choose one of "
                 f"{VICTIM_POLICIES}")
         self.victim_policy = victim_policy
+
+        # -- host-RAM block tier under the paged pool --------------------
+        # With a byte budget > 0, refcount-0 cached blocks evicted from
+        # the device LRU move to a pinned host store (numpy copies of the
+        # K/V planes, scale planes included) instead of dying, and a
+        # prefix hit on a host-resident digest swaps the block back into
+        # a free device slot at admission — warm-from-host is bitwise the
+        # cold stream because the bytes round-trip verbatim.
+        self.host_pool_bytes = int(host_pool_bytes or 0)
+        if self.host_pool_bytes < 0:
+            raise ValueError("host_pool_bytes must be >= 0 (0 disables "
+                             "the host-RAM tier)")
+        self.host_tier = bool(self.host_pool_bytes
+                              and self.paged and self.prefix_cache)
+        if self.host_pool_bytes and not self.host_tier:
+            raise ValueError(
+                f"{cfg.name}: the host-RAM block tier rides on the paged "
+                "pool + prefix cache (spilled blocks are found by their "
+                "chain digests); enable both or set host_pool_bytes=0")
+        if victim_policy == "block-to-host" and not self.host_tier:
+            raise ValueError(
+                "victim_policy='block-to-host' spills the victim's K/V "
+                "to the host tier; pass host_pool_bytes > 0 (and keep the "
+                "paged pool + prefix cache on)")
+        self._host_store: "collections.OrderedDict[int, _HostBlock]" = (
+            collections.OrderedDict())          # insertion order = LRU
+        self._host_index: Dict[bytes, int] = {} # digest → host id
+        self._host_next_id = 0
+        self.host_bytes = 0
+        self.swap_ins = 0            # host → device block copies
+        self.swap_outs = 0           # device → host spills
+        self.host_evictions = 0      # host-tier cold deaths (budget)
+        self.host_hit_blocks = 0
+        self.host_hit_tokens = 0
+        if self.paged:
+            self._write_block = jax.jit(write_pool_block,
+                                        donate_argnums=(0,))
         if max_head_bypass < 0:
             raise ValueError("max_head_bypass must be >= 0 (0 disables "
                              "head-of-line bypass)")
@@ -748,7 +816,10 @@ class ContinuousScheduler:
                  and b not in exclude and self._freeable(b) >= shortfall]
         if not cands:
             return None
-        if self.victim_policy == "most-blocks":
+        if self.victim_policy in ("most-blocks", "block-to-host"):
+            # block-to-host selects like most-blocks; it differs in what
+            # happens to the victim's K/V (spilled to host, not left to
+            # LRU churn) — see `_preempt`.
             key = lambda b: (self._freeable(b), -b)       # noqa: E731
         elif self.victim_policy == "lowest-tier":
             def key(b):
@@ -769,11 +840,26 @@ class ContinuousScheduler:
         of the waiting queue as prompt ++ generated. Re-admission rides
         the ordinary suffix-only warm path over those registered blocks
         (or recomputes them cold if they were evicted meanwhile); either
-        way the resumed stream is bitwise the uninterrupted one."""
+        way the resumed stream is bitwise the uninterrupted one.
+
+        With ``victim_policy="block-to-host"`` the victim's now
+        refcount-0 resident blocks are spilled to the host tier
+        immediately instead of sitting in the device LRU: pool churn
+        between now and re-admission can no longer evict them cold, so
+        the resume is warm-from-host at worst (same bits — the swap-back
+        writes the spilled bytes verbatim)."""
         req = self._slots[b]
         self.preemptions += 1
         req.preemptions += 1
+        row = self._block_tab[b]
+        row_blocks = [int(blk) for blk in row[row >= 0]]
         self._release_slot(b)
+        if self.victim_policy == "block-to-host":
+            for blk in row_blocks:
+                if blk in self._lru and blk in self._block_hash:
+                    self._lru.pop(blk)
+                    self._spill_block(blk)
+                    self._free.append(blk)
         self.waiting.append(req)
 
     def _bypass_candidate(self, deg: bool):
@@ -854,21 +940,298 @@ class ContinuousScheduler:
         self._peak_blocks = max(self._peak_blocks, self._live_blocks)
 
     def _evict_lru(self) -> None:
-        """Reclaim the least-recently-used retained prefix block: drop its
-        index entry and hand the block back to the free list. Only
-        refcount-0 blocks ever sit in the LRU, so eviction can never pull
-        a block out from under a live row or an admission reservation
-        (`_avail` already counts LRU blocks as reclaimable)."""
+        """Reclaim the least-recently-used retained prefix block and hand
+        it back to the free list. Only refcount-0 blocks ever sit in the
+        LRU, so eviction can never pull a block out from under a live row
+        or an admission reservation (`_avail` already counts LRU blocks
+        as reclaimable). With the host tier on, the block's bytes and
+        digests move to the host store instead of dying — a later hit on
+        the digest chain swaps them back; without it (or once the host
+        budget is exhausted) the digests are dropped cold."""
         if not self._lru:
             raise RuntimeError(
                 "paged pool invariant violated: reservation accounting "
                 "should guarantee a free or evictable block"
             )
         blk, _ = self._lru.popitem(last=False)
-        for h in self._block_hash.pop(blk, ()):
-            self._prefix_index.pop(h, None)
-        self.prefix_evictions += 1
+        if self.host_tier and blk in self._block_hash:
+            self._spill_block(blk)
+        else:
+            for h in self._block_hash.pop(blk, ()):
+                self._prefix_index.pop(h, None)
+            self.prefix_evictions += 1
         self._free.append(blk)
+
+    # -- host-RAM block tier: spill, budget, swap-back -----------------------
+
+    def _host_block_nbytes(self) -> int:
+        """Host bytes one spilled block occupies (K + V planes across all
+        layers, plus the fp32 scale planes of a quantized pool)."""
+        kv = self.cache.kv
+        per = 2 * kv.k.shape[0] * int(np.prod(kv.k.shape[2:])) \
+            * kv.k.dtype.itemsize
+        if kv.quantized:
+            per += 2 * kv.k_scale.shape[0] \
+                * int(np.prod(kv.k_scale.shape[2:])) \
+                * kv.k_scale.dtype.itemsize
+        return per
+
+    def _spill_block(self, blk: int) -> None:
+        """Move pool block `blk`'s bytes and digests to the host store.
+        The caller owns the block's pool bookkeeping (it must already be
+        out of the LRU and about to join the free list); this moves the
+        digest ownership: entries leave `_prefix_index`/`_block_hash` and
+        land in `_host_index`, so no digest ever resolves to both a live
+        device block and a stale host copy."""
+        kv = self.cache.kv
+        digests = self._block_hash.pop(blk)
+        for h in digests:
+            self._prefix_index.pop(h, None)
+        entry = _HostBlock(
+            k=np.asarray(kv.k[:, blk]),
+            v=np.asarray(kv.v[:, blk]),
+            k_scale=(np.asarray(kv.k_scale[:, blk])
+                     if kv.quantized else None),
+            v_scale=(np.asarray(kv.v_scale[:, blk])
+                     if kv.quantized else None),
+            digests=set(digests),
+            nbytes=self._host_block_nbytes(),
+        )
+        self._add_host_entry(entry)
+        self.swap_outs += 1
+
+    def _add_host_entry(self, entry: _HostBlock) -> None:
+        """Insert a block into the host store (most-recent end) and
+        enforce the byte budget by evicting the oldest entries cold."""
+        hid = self._host_next_id
+        self._host_next_id += 1
+        self._host_store[hid] = entry
+        self.host_bytes += entry.nbytes
+        for h in entry.digests:
+            self._host_index[h] = hid
+        while self.host_bytes > self.host_pool_bytes and self._host_store:
+            old_id, old = self._host_store.popitem(last=False)
+            for h in old.digests:
+                self._host_index.pop(h, None)
+            self.host_bytes -= old.nbytes
+            self.host_evictions += 1
+            self.prefix_evictions += 1   # a cached chunk died for real
+
+    def _pop_host_entry(self, hid: int) -> _HostBlock:
+        """Remove a host entry (swap-back claimed it): its digests leave
+        the host index FIRST, so allocator work that spills other blocks
+        mid-swap-in can never budget-evict the entry being claimed."""
+        entry = self._host_store.pop(hid)
+        for h in entry.digests:
+            self._host_index.pop(h, None)
+        self.host_bytes -= entry.nbytes
+        return entry
+
+    def _drop_host_digest(self, h: bytes) -> None:
+        """Device-side registration of digest `h` supersedes any host
+        copy (the freshly written device block serves future hits): drop
+        the digest from its host entry, and the entry once no digest can
+        reach it — the exclusivity half of the host-tier invariant."""
+        hid = self._host_index.pop(h, None)
+        if hid is None:
+            return
+        entry = self._host_store[hid]
+        entry.digests.discard(h)
+        if not entry.digests:
+            del self._host_store[hid]
+            self.host_bytes -= entry.nbytes
+
+    def _swap_in_hits(self, slot: int, host_hits, n_full: int) -> None:
+        """Swap host-resident prefix blocks back into the pool for row
+        `slot`: each hit allocates a device block from the row's
+        reservation (the ordinary `_alloc_block` path — eviction pressure
+        this causes may itself spill other LRU blocks to host) and writes
+        the host bytes back verbatim (`write_pool_block`). Full-chunk
+        hits re-register their digests against the new device block, so
+        concurrent same-prefix admissions share it like any cached block.
+        A partial-chunk hit is NOT re-registered: the claiming row will
+        append decode tokens into that block in place — exactly the
+        "live row's partial block is never shared" invariant of the
+        device path — and retirement re-registers the partial digest over
+        the final bytes as usual."""
+        for j, hid in host_hits:
+            entry = self._pop_host_entry(hid)
+            self._alloc_block(slot, j)
+            blk = int(self._block_tab[slot, j])
+            self.cache = self._write_block(
+                self.cache, blk, entry.k, entry.v,
+                entry.k_scale, entry.v_scale)
+            self.swap_ins += 1
+            self.host_hit_blocks += 1
+            if j < n_full:
+                for h in entry.digests:
+                    self._prefix_index[h] = blk
+                    self._block_hash.setdefault(blk, set()).add(h)
+
+    # -- durable prefix index: export / import / save / load -----------------
+
+    def _pool_geometry(self) -> dict:
+        kv = self.cache.kv
+        shape = (kv.k.shape[0], kv.k.shape[2], kv.k.shape[3], kv.k.shape[4])
+        return {"block_size": self.block_size,
+                "quantized": bool(kv.quantized),
+                "kv_shape": list(int(x) for x in shape),
+                "kv_dtype": str(kv.k.dtype)}
+
+    def export_index(self) -> dict:
+        """Snapshot every cached chunk the scheduler could serve a hit
+        from — host-tier entries AND hashed device blocks (live or
+        LRU-retained) — as a JSON-able dict: a versioned schema header
+        with the pool geometry, a block list of base64 K/V bytes, and a
+        digest → block-index map. Feeding it to `import_index` on a
+        fresh scheduler (a rebuild for `max_ctx` growth, or a process
+        restart via `save_index`/`load_index`) repopulates the HOST tier,
+        so the first same-prefix admission swaps the chunks back in
+        instead of re-prefilling cold. Digest chains are tier-scoped at
+        hash time, so mixed-tier indexes survive round trips unchanged."""
+        kv = self.cache.kv
+
+        def b64(a) -> str:
+            return base64.b64encode(np.ascontiguousarray(a).tobytes()) \
+                .decode("ascii")
+
+        blocks: List[dict] = []
+        digests: Dict[str, int] = {}
+        if self.paged:
+            for blk, hs in self._block_hash.items():
+                entry = {"k": b64(np.asarray(kv.k[:, blk])),
+                         "v": b64(np.asarray(kv.v[:, blk])),
+                         "k_scale": (b64(np.asarray(kv.k_scale[:, blk]))
+                                     if kv.quantized else None),
+                         "v_scale": (b64(np.asarray(kv.v_scale[:, blk]))
+                                     if kv.quantized else None)}
+                idx = len(blocks)
+                blocks.append(entry)
+                for h in hs:
+                    digests[h.hex()] = idx
+            for hb in self._host_store.values():
+                entry = {"k": b64(hb.k), "v": b64(hb.v),
+                         "k_scale": (b64(hb.k_scale)
+                                     if hb.k_scale is not None else None),
+                         "v_scale": (b64(hb.v_scale)
+                                     if hb.v_scale is not None else None)}
+                idx = len(blocks)
+                blocks.append(entry)
+                for h in hb.digests:
+                    digests[h.hex()] = idx
+        return {"schema": INDEX_SCHEMA, "version": INDEX_VERSION,
+                **self._pool_geometry(),
+                "blocks": blocks, "digests": digests}
+
+    def import_index(self, data) -> int:
+        """Load an `export_index` snapshot into the HOST tier (entries
+        count against ``host_pool_bytes`` like any spill; the oldest are
+        budget-evicted first when the snapshot exceeds it). Returns the
+        number of digests now resolvable. NEVER raises on bad input —
+        truncated or garbage files, a wrong schema version, a digest
+        referencing an out-of-range block, or a geometry mismatch
+        (different pool dtype/shape/block size) each warn and cold-start
+        with 0 loaded, because a stale index must not take down a serving
+        process that can simply re-prefill."""
+        if not self.host_tier:
+            if data:
+                warnings.warn("prefix-index import skipped: the host-RAM "
+                              "tier is disabled (host_pool_bytes=0)")
+            return 0
+        if not isinstance(data, dict) \
+                or data.get("schema") != INDEX_SCHEMA:
+            warnings.warn("prefix-index import: unrecognized payload "
+                          "(not an index snapshot) — cold start")
+            return 0
+        if data.get("version") != INDEX_VERSION:
+            warnings.warn(f"prefix-index import: unsupported version "
+                          f"{data.get('version')!r} (want {INDEX_VERSION})"
+                          " — cold start")
+            return 0
+        geo = self._pool_geometry()
+        theirs = {k: data.get(k) for k in geo}
+        if theirs != geo:
+            warnings.warn(f"prefix-index import: pool geometry mismatch "
+                          f"({theirs} != {geo}) — cold start")
+            return 0
+        blocks = data.get("blocks")
+        digests = data.get("digests")
+        if not isinstance(blocks, list) or not isinstance(digests, dict):
+            warnings.warn("prefix-index import: malformed blocks/digests "
+                          "tables — cold start")
+            return 0
+        by_block: Dict[int, set] = {}
+        try:
+            for hx, idx in digests.items():
+                idx = int(idx)
+                if not 0 <= idx < len(blocks):
+                    warnings.warn(
+                        f"prefix-index import: digest {hx!r} references "
+                        f"out-of-range block {idx} (have {len(blocks)}) "
+                        "— cold start")
+                    return 0
+                by_block.setdefault(idx, set()).add(bytes.fromhex(hx))
+        except (TypeError, ValueError) as e:
+            warnings.warn(f"prefix-index import: bad digest table ({e}) "
+                          "— cold start")
+            return 0
+        L, bs, nkv, hd = geo["kv_shape"]
+        kv_dt = self.cache.kv.k.dtype
+        loaded_digests = 0
+        entries: List[_HostBlock] = []
+        try:
+            for idx, hs in by_block.items():
+                e = blocks[idx]
+                k = np.frombuffer(base64.b64decode(e["k"]),
+                                  dtype=kv_dt).reshape(L, bs, nkv, hd)
+                v = np.frombuffer(base64.b64decode(e["v"]),
+                                  dtype=kv_dt).reshape(L, bs, nkv, hd)
+                ks = vs = None
+                if geo["quantized"]:
+                    ks = np.frombuffer(base64.b64decode(e["k_scale"]),
+                                       dtype=np.float32) \
+                        .reshape(L, bs, nkv, 1)
+                    vs = np.frombuffer(base64.b64decode(e["v_scale"]),
+                                       dtype=np.float32) \
+                        .reshape(L, bs, nkv, 1)
+                live = {h for h in hs if h not in self._prefix_index
+                        and h not in self._host_index}
+                if not live:
+                    continue   # fresher resident copy wins
+                entries.append(_HostBlock(
+                    k=k, v=v, k_scale=ks, v_scale=vs, digests=live,
+                    nbytes=self._host_block_nbytes()))
+                loaded_digests += len(live)
+        except (KeyError, TypeError, ValueError) as e:
+            warnings.warn(f"prefix-index import: corrupt block payload "
+                          f"({e}) — cold start")
+            return 0
+        for entry in entries:
+            self._add_host_entry(entry)
+        return loaded_digests
+
+    def save_index(self, path) -> int:
+        """Persist `export_index` to `path` as JSON. Returns the number
+        of digests written."""
+        data = self.export_index()
+        with open(path, "w") as f:
+            json.dump(data, f)
+            f.write("\n")
+        return len(data["digests"])
+
+    def load_index(self, path) -> int:
+        """Load a `save_index` file into the host tier via
+        `import_index`. Missing, truncated, or corrupt files warn and
+        cold-start with 0 — never raise (robustness contract shared with
+        the kernel registry's plan cache)."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError) as e:
+            warnings.warn(f"prefix-index load from {path!s} failed ({e}) "
+                          "— cold start")
+            return 0
+        return self.import_index(data)
 
     def _take_free_block(self) -> int:
         if not self._free:
@@ -1065,27 +1428,45 @@ class ContinuousScheduler:
         blocks the row may still allocate: uncovered virtual blocks plus
         one for a potential copy-on-write of a shared partial block,
         hashes = the (full, partial) chain digests, reused at
-        registration time)."""
+        registration time, host_hits [(virtual j, host id)] = chain
+        positions resident in the host-RAM tier rather than the pool).
+
+        The chain walk consults the device index first and falls back to
+        the host index per digest, so a chain that is part-device,
+        part-host still matches end to end. Host hits are counted in
+        `resident` (their bytes swap back before prefill) but NOT
+        subtracted from the reservation: each one consumes a device block
+        through the ordinary `_alloc_block` at swap-in."""
         need = self._need_blocks(req)
         if not self.prefix_cache:
-            return [], 0, 0, need, None
+            return [], 0, 0, need, None, []
         hashes = self._req_hashes(req)
         full, partial = hashes
         hits: List[Tuple[int, int]] = []
+        host_hits: List[Tuple[int, int]] = []
         for j, h in enumerate(full):
             blk = self._prefix_index.get(h)
-            if blk is None:
-                break
-            hits.append((j, blk))
-        full_hits = len(hits)
+            if blk is not None:
+                hits.append((j, blk))
+                continue
+            hid = self._host_index.get(h) if self.host_tier else None
+            if hid is not None:
+                host_hits.append((j, hid))
+                continue
+            break
+        dev_full = len(hits)     # device full-chunk hits claim for free
+        full_hits = dev_full + len(host_hits)
         resident = full_hits * self.block_size
         if full_hits == len(full) and partial is not None:
             blk = self._prefix_index.get(partial)
             if blk is not None:
                 hits.append((full_hits, blk))
                 resident = self._serve_len(req)
+            elif self.host_tier and partial in self._host_index:
+                host_hits.append((full_hits, self._host_index[partial]))
+                resident = self._serve_len(req)
         revive = sum(1 for _, b in hits if self._refcnt[b] == 0)
-        return hits, resident, revive, need - full_hits, hashes
+        return hits, resident, revive, need - dev_full, hashes, host_hits
 
     def _claim_hits(self, slot: int, hits) -> None:
         """Map matched pool blocks into row `slot`'s table, incref'ing
@@ -1117,7 +1498,9 @@ class ContinuousScheduler:
             # An already-hashed block may take a second digest (the
             # straddle block of a retired row carries both the prompt-
             # partial and the extended full-chunk digest); its bytes are
-            # frozen from the first registration on.
+            # frozen from the first registration on. A host copy of the
+            # digest is superseded by the fresh device bytes.
+            self._drop_host_digest(h)
             self._prefix_index[h] = blk
             self._block_hash.setdefault(blk, set()).add(h)
 
@@ -1138,6 +1521,7 @@ class ContinuousScheduler:
         blk = int(self._block_tab[slot, j])
         if blk < 0 or partial in self._prefix_index:
             return
+        self._drop_host_digest(partial)
         self._prefix_index[partial] = blk
         self._block_hash.setdefault(blk, set()).add(partial)
 
@@ -1253,6 +1637,20 @@ class ContinuousScheduler:
             "prefix_evictions": self.prefix_evictions,
             "cached_prefix_blocks": len(self._prefix_index),
             "prefill_tokens_computed": self.prefill_tokens_computed,
+            # -- host-RAM block tier (HBM-vs-host split, FINN-style
+            #    capacity modeling: device pool = BRAM/HBM working set,
+            #    host store = the spill capacity behind it) --
+            "host_tier": self.host_tier,
+            "host_pool_bytes": self.host_pool_bytes,
+            "host_blocks": len(self._host_store),
+            "host_bytes": self.host_bytes,
+            "swap_ins": self.swap_ins,
+            "swap_outs": self.swap_outs,
+            "host_evictions": self.host_evictions,
+            "host_hit_blocks": self.host_hit_blocks,
+            "host_hit_tokens": self.host_hit_tokens,
+            "host_hit_rate": (self.host_hit_tokens / self.prompt_tokens_seen
+                              if self.prompt_tokens_seen else 0.0),
             # -- Sarathi-style chunked prefill / decode interleave --
             "chunked_prefill": self.chunked_prefill,
             "prefill_budget": self.prefill_budget,
@@ -1324,17 +1722,23 @@ class ContinuousScheduler:
         n = len(toks)
         tier = self._claim_tier(req, slot)
         if self.paged:
-            hits, resident, revive, reserve, hashes = (
+            hits, resident, revive, reserve, hashes, host_hits = (
                 match if match is not None else self._match_prefix(req)
             )
             self.prompt_tokens_seen += n
-            self.prefix_hit_blocks += len(hits)
+            self.prefix_hit_blocks += len(hits) + len(host_hits)
             self.prefix_hit_tokens += resident
+            if host_hits:
+                self.host_hit_tokens += sum(
+                    min(self.block_size, n - j * self.block_size)
+                    for j, _ in host_hits)
             if self.prefix_cache:
                 self._slot_hashes[slot] = hashes
             self._avail -= reserve
             self._reserved[slot] = reserve
             self._claim_hits(slot, hits)   # revives pay into _avail here
+            if host_hits:
+                self._swap_in_hits(slot, host_hits, len(hashes[0]))
             for j in range(-(-n // self.block_size)):
                 if self._block_tab[slot, j] < 0:
                     self._alloc_block(slot, j)
@@ -1473,15 +1877,21 @@ class ContinuousScheduler:
         toks = self._serve_tokens(req)
         n = len(toks)
         self._claim_tier(req, slot)
-        hits, resident, revive, reserve, hashes = match
+        hits, resident, revive, reserve, hashes, host_hits = match
         self.prompt_tokens_seen += n
-        self.prefix_hit_blocks += len(hits)
+        self.prefix_hit_blocks += len(hits) + len(host_hits)
         self.prefix_hit_tokens += resident
+        if host_hits:
+            self.host_hit_tokens += sum(
+                min(self.block_size, n - j * self.block_size)
+                for j, _ in host_hits)
         if self.prefix_cache:
             self._slot_hashes[slot] = hashes
         self._avail -= reserve
         self._reserved[slot] = reserve
         self._claim_hits(slot, hits)   # revives pay into _avail here
+        if host_hits:
+            self._swap_in_hits(slot, host_hits, len(hashes[0]))
         for j in range(-(-n // self.block_size)):
             if self._block_tab[slot, j] < 0:
                 self._alloc_block(slot, j)

@@ -8,7 +8,10 @@ but the same assertions over a reproducible sample, and zero skipped tests.
 
 Only the API surface the test-suite uses is implemented:
   strategies.integers / floats / booleans / sampled_from / composite,
-  @given, @settings(max_examples=, deadline=).
+  @given (positional or keyword strategies; non-strategy parameters
+  stay visible to pytest, so module-scoped fixtures compose with
+  @given exactly like under real hypothesis),
+  @settings(max_examples=, deadline=).
 """
 from __future__ import annotations
 
@@ -60,7 +63,7 @@ def composite(fn):
     return builder
 
 
-def given(*strats):
+def given(*strats, **kwstrats):
     def deco(fn):
         @functools.wraps(fn)
         def run(*args, **kwargs):
@@ -72,18 +75,26 @@ def given(*strats):
             for i in range(n):
                 rng = np.random.default_rng(seed0 + i)
                 vals = [s.example(rng) for s in strats]
+                kvals = {k: s.example(rng) for k, s in kwstrats.items()}
                 try:
-                    fn(*args, *vals, **kwargs)
+                    fn(*args, *vals, **kwargs, **kvals)
                 except Exception as e:  # noqa: BLE001 — annotate the example
                     raise AssertionError(
-                        f"falsifying example #{i}: {vals!r}"
+                        f"falsifying example #{i}: {vals!r} {kvals!r}"
                     ) from e
 
         run._hypothesis_fallback = True
-        # Hide the original parameters from pytest's fixture resolution —
-        # the strategies supply them, they are not fixtures.
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (the strategies provide them); everything else —
+        # e.g. module-scoped model fixtures — stays visible so pytest
+        # injects it, mirroring hypothesis' fixture interop. Positional
+        # strategies fill the RIGHTMOST parameters, like hypothesis.
         del run.__wrapped__
-        run.__signature__ = inspect.Signature()
+        params = list(inspect.signature(fn).parameters.values())
+        if strats:
+            params = params[: -len(strats)]
+        params = [p for p in params if p.name not in kwstrats]
+        run.__signature__ = inspect.Signature(params)
         return run
 
     return deco

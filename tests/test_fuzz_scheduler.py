@@ -1,0 +1,204 @@
+"""Randomized differential fuzz of the continuous scheduler.
+
+Each case drives one scheduler through a few hundred seeded steps of
+adversarial traffic — random admissions onto shared prefixes, cancels,
+step-budget deadlines, precision tiers, self-speculation, pool-pressure
+preemption, and host-tier spills (the pool is sized well below the
+working set, so LRU eviction and block-to-host churn fire constantly) —
+and checks two things the whole serving stack promises:
+
+  * `assert_pool_invariants` after EVERY step (refcounts, partition,
+    index/host-tier exclusivity, reservation and byte accounting);
+  * every retired stream is bitwise its solo-engine oracle's: clean
+    retirements match exactly, cancelled/deadline retirements match a
+    prefix. Sampling is step-indexed per (seed, rid), so sampled
+    streams are compared exactly too.
+
+Runs on bf16 and int8 pools across ≥3 seeds. Uses the deterministic
+hypothesis fallback so it collects (and stays reproducible) without
+hypothesis installed.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:  # container without hypothesis — deterministic fallback
+    from hypothesis_fallback import given, settings, strategies as st  # noqa: F401,E501
+
+from repro.configs import get_reduced_config
+from repro.core.quant import QuantConfig
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Request, assert_pool_invariants
+
+KEY = jax.random.PRNGKey(0)
+Q8 = QuantConfig(w_bits=8, a_bits=8)
+SYS = np.arange(16) % 64                     # shared system prefix
+HOSTKB = 1 << 20
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def olmo_int8():
+    cfg = dataclasses.replace(get_reduced_config("olmo-1b"),
+                              kv_cache_quant=True)
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_ctx", 64)
+    kw.setdefault("bucket", 16)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("chunked_prefill", False)
+    return ContinuousScheduler(cfg, params, **kw)
+
+
+class _Oracle:
+    """Memoized solo-engine reference: each distinct request is served
+    alone through ONE long-lived scheduler (prefix cache off, pool far
+    bigger than any request) so its stream is the uninterrupted,
+    unshared ground truth. One instance per model fixture — reusing the
+    scheduler keeps every oracle call on warm compiled functions."""
+
+    def __init__(self, cfg, params, **kw):
+        kw.setdefault("pool_blocks", 96)
+        self.sched = _sched(cfg, params, prefix_cache=False,
+                            preempt=False, **kw)
+        self.memo = {}
+
+    def stream(self, req: Request):
+        key = (tuple(int(t) for t in req.prompt), req.max_new_tokens,
+               req.tier, float(req.temperature), req.rid)
+        if key not in self.memo:
+            clone = Request(rid=req.rid, prompt=np.array(req.prompt),
+                            max_new_tokens=req.max_new_tokens,
+                            temperature=req.temperature, tier=req.tier)
+            self.sched.run([clone])
+            assert clone.error is None, f"oracle failed: {clone.error}"
+            self.memo[key] = clone.out_tokens
+        return self.memo[key]
+
+
+def _fuzz_run(cfg, params, oracle, seed, steps, sched_kw, tiers=None):
+    rng = np.random.default_rng(seed)
+    sched = _sched(cfg, params, **sched_kw)
+    tails = [rng.integers(0, 64, int(rng.integers(1, 8)))
+             for _ in range(5)]
+    tier_names = tiers.split(",") if tiers else [None]
+    retired, next_rid = [], 0
+
+    for _ in range(steps):
+        u = rng.random()
+        backlog = sched.num_active + len(sched.waiting)
+        if u < 0.35 and backlog < 6:
+            tail = tails[int(rng.integers(len(tails)))]
+            extra = rng.integers(0, 64, int(rng.integers(0, 4)))
+            prompt = np.concatenate([SYS[:int(rng.integers(4, 17))],
+                                     tail, extra]).astype(np.int64)
+            req = Request(
+                rid=next_rid, prompt=prompt,
+                max_new_tokens=int(rng.integers(2, 7)),
+                temperature=float(rng.choice([0.0, 0.0, 0.0, 0.8])),
+                tier=tier_names[int(rng.integers(len(tier_names)))],
+                deadline_steps=(int(rng.integers(2, 8))
+                                if rng.random() < 0.08 else None))
+            next_rid += 1
+            sched.submit(req)
+        elif u < 0.42:
+            rids = ([r.rid for r in sched._slots if r is not None]
+                    + [r.rid for r in sched.waiting])
+            if rids:
+                sched.cancel(int(rng.choice(rids)))
+        retired.extend(sched.step())
+        assert_pool_invariants(sched)
+    while sched.num_active or sched.waiting:
+        retired.extend(sched.step())
+        assert_pool_invariants(sched)
+
+    assert retired, "fuzz run retired nothing — admission never fired?"
+    clean = 0
+    for req in retired:
+        got = req.out_tokens or []
+        ref = oracle.stream(req)
+        if req.error is None:
+            assert got == ref, (
+                f"rid {req.rid} diverged from its solo oracle:\n"
+                f"  got {got}\n  ref {ref}")
+            clean += 1
+        else:
+            assert req.error in ("cancelled", "deadline"), req.error
+            assert got == ref[:len(got)], (
+                f"rid {req.rid} ({req.error}) emitted a non-prefix "
+                f"stream:\n  got {got}\n  ref {ref}")
+    assert clean, "every retirement was abnormal — nothing verified"
+    return sched
+
+
+# -- the fuzz matrix -------------------------------------------------------
+
+_ORACLES: dict = {}
+SEEDS = st.integers(0, 2**20)   # ≥3 distinct seeds per test (max_examples)
+
+
+@pytest.mark.slow
+@given(seed=SEEDS)
+@settings(max_examples=3, deadline=None)
+def test_fuzz_differential_bf16(olmo, seed):
+    """Main matrix: pressure-sized pool, host tier + block-to-host
+    preemption + prefix cache + chunked prefill all armed, 3 seeds."""
+    cfg, params = olmo
+    oracle = _ORACLES.setdefault("bf16", _Oracle(cfg, params))
+    sched = _fuzz_run(cfg, params, oracle, seed, 220, dict(
+        pool_blocks=16, host_pool_bytes=HOSTKB,
+        victim_policy="block-to-host", chunked_prefill=True,
+        prefill_budget=8))
+    st_ = sched.pool_stats()
+    assert st_["swap_outs"] > 0, "pool never pressured the host tier"
+
+
+@pytest.mark.slow
+@given(seed=SEEDS)
+@settings(max_examples=3, deadline=None)
+def test_fuzz_differential_int8(olmo_int8, seed):
+    cfg, params = olmo_int8
+    oracle = _ORACLES.setdefault("int8", _Oracle(cfg, params))
+    _fuzz_run(cfg, params, oracle, seed, 160, dict(
+        pool_blocks=16, host_pool_bytes=HOSTKB,
+        victim_policy="block-to-host"))
+
+
+@pytest.mark.slow
+@given(seed=SEEDS)
+@settings(max_examples=3, deadline=None)
+def test_fuzz_differential_tiers_speculative(olmo, seed):
+    """Quantized matrix: per-request precision tiers and
+    self-speculation active while the pool churns."""
+    cfg, params = olmo
+    oracle = _ORACLES.setdefault(
+        "q8", _Oracle(cfg, params, quant=Q8, tiers="w8a8,w4a8"))
+    _fuzz_run(cfg, params, oracle, seed, 120, dict(
+        pool_blocks=16, host_pool_bytes=HOSTKB,
+        victim_policy="block-to-host", quant=Q8, tiers="w8a8,w4a8",
+        speculate=2, draft_policy="w4a8"), tiers="w8a8,w4a8")
+
+
+def test_fuzz_differential_smoke(olmo):
+    """Tier-1 (non-slow) guard: one short seeded run so the fuzz path
+    itself can't rot between full (slow-marked) runs."""
+    cfg, params = olmo
+    oracle = _ORACLES.setdefault("bf16", _Oracle(cfg, params))
+    _fuzz_run(cfg, params, oracle, 5, 60, dict(
+        pool_blocks=16, host_pool_bytes=HOSTKB,
+        victim_policy="block-to-host"))

@@ -1,0 +1,329 @@
+"""Host-RAM spill tier under the paged pool + durable prefix index.
+
+The headline contract extends PR 5's warm≡cold row: a prefix chunk that
+was evicted to the host store and swapped back into a free device slot
+serves EXACTLY the tokens a cold prefill would — across the bf16 and
+int8 pools, precision tiers, and mid-decode admission. The tier must be
+invisible in the outputs and visible only in the swap/host-hit counters.
+Alongside: `block-to-host` preemption (the victim's resident K/V spills
+to host instead of dying with the slot), the host byte budget, and the
+versioned JSON prefix index surviving process restarts and scheduler
+rebuilds with a warm hit-rate > 0.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.quant import QuantConfig
+from repro.models import build_model
+from repro.serving import (
+    ContinuousScheduler,
+    Request,
+    ServingEngine,
+    assert_pool_invariants,
+)
+
+KEY = jax.random.PRNGKey(0)
+Q8 = QuantConfig(w_bits=8, a_bits=8)
+SYS = np.arange(24) % 64                      # shared prefix: 6 blocks @4
+HOSTKB = 1 << 20                              # roomy host budget
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def olmo_int8():
+    cfg = dataclasses.replace(get_reduced_config("olmo-1b"),
+                              kv_cache_quant=True)
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_ctx", 48)
+    kw.setdefault("bucket", 16)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("chunked_prefill", False)
+    return ContinuousScheduler(cfg, params, **kw)
+
+
+def _drain(sched, cap=400):
+    out, steps = [], 0
+    while sched.num_active or sched.num_waiting:
+        out.extend(sched.step())
+        steps += 1
+        assert steps < cap, "scheduler failed to drain (deadlock?)"
+    assert_pool_invariants(sched)
+    return out
+
+
+def _requests(n=4, tail=3, max_new=4, **kw):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [SYS, rng.integers(0, 64, tail + i)]).astype(np.int64),
+                    max_new_tokens=max_new, temperature=0.0, **kw)
+            for i in range(n)]
+
+
+def _serve_twice(cfg, params, host_bytes, **kw):
+    """Serve the same request stream twice through one scheduler (pool
+    small enough that round 1's cached blocks get evicted before round
+    2), returning (sched, round1 tokens, round2 tokens)."""
+    kw.setdefault("pool_blocks", 14)
+    sched = _sched(cfg, params, host_pool_bytes=host_bytes, **kw)
+    a = _requests()
+    sched.run(a)
+    assert_pool_invariants(sched)
+    b = _requests()
+    sched.run(b)
+    assert_pool_invariants(sched)
+    return (sched, [r.out_tokens for r in a], [r.out_tokens for r in b])
+
+
+# -- the bit-identity contract --------------------------------------------
+
+
+@pytest.mark.parametrize("fixture", ["olmo", "olmo_int8"])
+def test_warm_from_host_bit_identical(fixture, request):
+    """Round 2 re-serves round 1's prompts after the pool churned their
+    blocks out to host; every stream must equal the no-host-tier run,
+    and the swap counters must show the tier actually carried hits."""
+    cfg, params = request.getfixturevalue(fixture)
+    _, c1, c2 = _serve_twice(cfg, params, 0)
+    sched, h1, h2 = _serve_twice(cfg, params, HOSTKB)
+    assert h1 == c1 and h2 == c2
+    st = sched.pool_stats()
+    assert st["host_tier"] and st["swap_outs"] > 0
+    assert st["swap_ins"] > 0 and st["host_hit_blocks"] > 0
+    assert st["host_hit_rate"] > 0
+    assert st["host_bytes"] <= st["host_pool_bytes"]
+
+
+@pytest.mark.slow
+def test_warm_from_host_bit_identical_tiers(olmo):
+    """Digest chains are tier-scoped, so a w4a8 request never hits a
+    w8a8 chunk — through the host tier too."""
+    cfg, params = olmo
+    kw = dict(quant=Q8, tiers="w8a8,w4a8")
+
+    def reqs():
+        rng = np.random.default_rng(7)
+        return [Request(rid=i,
+                        prompt=np.concatenate(
+                            [SYS, rng.integers(0, 64, 3 + i)]
+                        ).astype(np.int64),
+                        max_new_tokens=4, temperature=0.0,
+                        tier=("w8a8", "w4a8")[i % 2])
+                for i in range(4)]
+
+    def toks(done):
+        return [r.out_tokens for r in sorted(done, key=lambda r: r.rid)]
+
+    cold = _sched(cfg, params, pool_blocks=14, **kw)
+    cold.run(reqs())
+    c1 = toks(cold.run(reqs()))
+    warm = _sched(cfg, params, pool_blocks=14,
+                  host_pool_bytes=HOSTKB, **kw)
+    warm.run(reqs())
+    w1 = toks(warm.run(reqs()))
+    assert w1 == c1
+    assert_pool_invariants(warm)
+    assert warm.pool_stats()["swap_ins"] > 0
+
+
+def test_warm_from_host_mid_decode(olmo):
+    """A host-resident prefix admitted while another row is mid-decode
+    swaps back in without disturbing either stream."""
+    cfg, params = olmo
+
+    def run(host_bytes):
+        sched = _sched(cfg, params, pool_blocks=14,
+                       host_pool_bytes=host_bytes)
+        sched.run(_requests())               # populate, then churn out
+        long = Request(90, (np.arange(9) * 5 + 1) % 64, max_new_tokens=10,
+                       temperature=0.0)
+        sched.submit(long)
+        for _ in range(3):
+            sched.step()
+        rejoin = _requests(n=1, max_new=6)[0]
+        sched.submit(rejoin)
+        _drain(sched)
+        return sched, long.out_tokens, rejoin.out_tokens
+
+    _, cold_long, cold_rejoin = run(0)
+    sched, warm_long, warm_rejoin = run(HOSTKB)
+    assert warm_long == cold_long
+    assert warm_rejoin == cold_rejoin
+    assert sched.pool_stats()["swap_ins"] > 0
+
+
+# -- block-to-host preemption ---------------------------------------------
+
+
+def test_block_to_host_preempt_resume_bit_identical(olmo):
+    """Preemption with victim_policy=block-to-host spills the victim's
+    resident blocks to host; its warm resume still produces exactly the
+    uninterrupted stream."""
+    cfg, params = olmo
+    P8 = (np.arange(8) * 3 + 1) % 64
+    P16 = (np.arange(16) * 7 + 3) % 64
+
+    def scenario(**kw):
+        sched = _sched(cfg, params, pool_blocks=10, max_ctx=64, **kw)
+        r1 = Request(1, P8, max_new_tokens=12)
+        r2 = Request(2, P16, max_new_tokens=8)
+        sched.submit(r1)
+        for _ in range(3):
+            sched.step()
+        sched.submit(r2)
+        _drain(sched)
+        assert r1.error is None and r2.error is None
+        return sched, r1, r2
+
+    solo = _sched(cfg, params, pool_blocks=64, max_ctx=64)
+    ref1 = Request(1, P8, max_new_tokens=12)
+    ref2 = Request(2, P16, max_new_tokens=8)
+    solo.run([ref1]); solo.run([ref2])  # noqa: E702
+
+    sched, r1, r2 = scenario(host_pool_bytes=HOSTKB,
+                             victim_policy="block-to-host")
+    assert sched.preemptions >= 1 and r1.preemptions >= 1
+    assert r1.out_tokens == ref1.out_tokens
+    assert r2.out_tokens == ref2.out_tokens
+    st = sched.pool_stats()
+    assert st["victim_policy"] == "block-to-host"
+    assert st["swap_outs"] > 0
+    assert st["prefix_hit_tokens"] >= len(P8)
+
+
+def test_block_to_host_requires_host_tier(olmo):
+    cfg, params = olmo
+    with pytest.raises(ValueError, match="block-to-host"):
+        _sched(cfg, params, victim_policy="block-to-host")
+    with pytest.raises(ValueError, match="host_pool_bytes"):
+        _sched(cfg, params, paged=False, host_pool_bytes=HOSTKB)
+
+
+# -- the byte budget -------------------------------------------------------
+
+
+def test_host_budget_evicts_oldest(olmo):
+    """A budget smaller than the working set evicts oldest-first and
+    never overshoots; the pool invariants (incl. host-byte conservation)
+    hold throughout."""
+    cfg, params = olmo
+    probe = _sched(cfg, params, host_pool_bytes=HOSTKB)
+    one = probe._host_block_nbytes()
+    budget = 2 * one                        # room for exactly two blocks
+    sched, _, _ = _serve_twice(cfg, params, budget)
+    st = sched.pool_stats()
+    assert st["host_bytes"] <= budget
+    assert st["host_blocks"] <= 2
+    assert st["host_evictions"] > 0
+    assert_pool_invariants(sched)
+
+
+# -- durable prefix index --------------------------------------------------
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("bucket", 16)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("pool_blocks", 40)
+    kw.setdefault("chunked_prefill", False)
+    kw.setdefault("preempt", False)
+    kw.setdefault("host_pool_bytes", HOSTKB)
+    return ServingEngine(cfg, params, **kw)
+
+
+@pytest.mark.parametrize("fixture", ["olmo", "olmo_int8"])
+def test_index_survives_restart(fixture, request, tmp_path):
+    """save_index → fresh engine → load_index (deferred until the first
+    scheduler build) serves the repeat stream warm-from-host, tokens
+    bitwise the first process's."""
+    cfg, params = request.getfixturevalue(fixture)
+    path = tmp_path / "idx.json"
+    e1 = _engine(cfg, params)
+    out1 = [r.out_tokens for r in e1.generate(_requests())]
+    assert e1.save_index(path) > 0
+
+    e2 = _engine(cfg, params)
+    assert e2.load_index(path) > 0          # deferred: no scheduler yet
+    out2 = [r.out_tokens for r in e2.generate(_requests())]
+    assert out2 == out1
+    st = e2.pool_stats()
+    assert st["host_hit_rate"] > 0 and st["swap_ins"] > 0
+    assert_pool_invariants(e2._sched)
+
+
+def test_index_survives_scheduler_rebuild(olmo):
+    """A max_ctx-growth rebuild re-imports the old scheduler's exported
+    index into the new host tier: re-admissions after the rebuild hit
+    warm (acceptance criterion: hit-rate > 0 across a rebuild)."""
+    cfg, params = olmo
+    eng = _engine(cfg, params)
+    out1 = [r.out_tokens for r in eng.generate(_requests())]
+    old = eng._sched
+    big = Request(99, np.concatenate([SYS, np.arange(40) % 64]).astype(
+        np.int64), max_new_tokens=4, temperature=0.0)
+    eng.generate([big])
+    assert eng._sched is not old, "growth should have rebuilt"
+    out2 = [r.out_tokens for r in eng.generate(_requests())]
+    assert out2 == out1
+    st = eng.pool_stats()
+    assert st["host_hit_rate"] > 0
+    assert_pool_invariants(eng._sched)
+
+
+def test_index_roundtrip_before_first_generate(olmo, tmp_path):
+    """An engine that loaded an index but never served can still save it
+    back verbatim (the --index flag's save-on-exit path)."""
+    cfg, params = olmo
+    path, path2 = tmp_path / "a.json", tmp_path / "b.json"
+    e1 = _engine(cfg, params)
+    e1.generate(_requests())
+    n = e1.save_index(path)
+    e2 = _engine(cfg, params)
+    assert e2.load_index(path) == n
+    assert e2.save_index(path2) == n
+
+
+def test_index_geometry_mismatch_cold_starts(olmo, tmp_path):
+    """An index saved from a different pool geometry (block size) warns
+    and loads nothing — never crashes, never corrupts the pool."""
+    cfg, params = olmo
+    path = tmp_path / "idx.json"
+    e1 = _engine(cfg, params, block_size=4)
+    e1.generate(_requests())
+    e1.save_index(path)
+    other = _engine(cfg, params, block_size=8)
+    other.generate(_requests(n=1))
+    with pytest.warns(UserWarning, match="geometry"):
+        assert other._sched.load_index(path) == 0
+    assert_pool_invariants(other._sched)
+
+
+def test_import_skipped_when_tier_off(olmo, tmp_path):
+    cfg, params = olmo
+    path = tmp_path / "idx.json"
+    e1 = _engine(cfg, params)
+    e1.generate(_requests(n=2))
+    e1.save_index(path)
+    off = _engine(cfg, params, host_pool_bytes=0)
+    off.generate(_requests(n=1))
+    with pytest.warns(UserWarning, match="host"):
+        assert off._sched.load_index(path) == 0
+    assert_pool_invariants(off._sched)

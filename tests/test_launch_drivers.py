@@ -1,6 +1,7 @@
 """End-to-end driver smoke tests: train CLI → checkpoint → serve CLI with
 the quantized + int8-cache path (subprocesses, reduced configs)."""
 import os
+import pytest
 import subprocess
 import sys
 from pathlib import Path
@@ -17,6 +18,7 @@ def _run(args, timeout=420):
     )
 
 
+@pytest.mark.slow
 def test_train_then_serve_roundtrip(tmp_path):
     ck = tmp_path / "ckpt"
     r = _run(["repro.launch.train", "--arch", "olmo-1b", "--reduced",
@@ -34,6 +36,7 @@ def test_train_then_serve_roundtrip(tmp_path):
     assert "2 requests, 8 tokens" in r2.stdout
 
 
+@pytest.mark.slow
 def test_train_resumes_on_fake_mesh(tmp_path):
     """Elastic path: train on 1 device, resume on a fake 2x2 mesh."""
     ck = tmp_path / "ckpt"

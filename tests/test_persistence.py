@@ -1,0 +1,178 @@
+"""Corrupt/stale-file robustness of BOTH JSON persistence paths.
+
+`--plans` (kernel-registry block-plan cache) and `--index` (serving
+prefix index) share one contract: a missing, truncated, garbage, or
+wrong-schema file — and an index whose digest table references an
+out-of-range block — warns and cold-starts with 0 entries loaded.
+Neither path may ever raise out of `load_*`: a stale cache file must
+not take down a process that can simply re-autotune / re-prefill.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.kernels.registry import KernelRegistry
+from repro.models import build_model
+from repro.serving import Request, ServingEngine, assert_pool_invariants
+
+KEY = jax.random.PRNGKey(0)
+SYS = np.arange(24) % 64
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_reduced_config("olmo-1b")
+    params = build_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _engine(cfg, params):
+    return ServingEngine(cfg, params, max_batch=2, bucket=16, paged=True,
+                         block_size=4, pool_blocks=40, prefix_cache=True,
+                         chunked_prefill=False, preempt=False,
+                         host_pool_bytes=1 << 20)
+
+
+def _requests(n=2):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [SYS, rng.integers(0, 64, 3 + i)]).astype(np.int64),
+                    max_new_tokens=3, temperature=0.0)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def saved_index(olmo, tmp_path_factory):
+    """One good index file + the engine stream that produced it."""
+    cfg, params = olmo
+    path = tmp_path_factory.mktemp("idx") / "good.json"
+    eng = _engine(cfg, params)
+    out = [r.out_tokens for r in eng.generate(_requests())]
+    assert eng.save_index(path) > 0
+    return path, out
+
+
+# -- the registry plan cache (--plans) -------------------------------------
+
+
+def _good_plans(tmp_path):
+    reg = KernelRegistry()
+    reg.record_plan("bitplane_matmul", 64, 64, 64, (8, 8, 8), "interpret")
+    path = tmp_path / "plans.json"
+    reg.save_plans(path)
+    return path
+
+
+@pytest.mark.parametrize("mutate", [
+    pytest.param(lambda txt: txt[: len(txt) // 2], id="truncated"),
+    pytest.param(lambda txt: "not json {{{", id="garbage"),
+    pytest.param(
+        lambda txt: json.dumps({**json.loads(txt), "version": 99}),
+        id="wrong-version"),
+    pytest.param(lambda txt: json.dumps({"version": 1, "plans": [
+        {"op": "bitplane_matmul"}]}), id="missing-fields"),
+    pytest.param(lambda txt: json.dumps([1, 2, 3]), id="not-a-dict"),
+])
+def test_load_plans_corrupt_cold_starts(tmp_path, mutate):
+    path = _good_plans(tmp_path)
+    path.write_text(mutate(path.read_text()))
+    reg = KernelRegistry()
+    with pytest.warns(UserWarning):
+        assert reg.load_plans(path) == 0
+    assert reg.cache_info()["plans"] == 0
+    # The registry still plans heuristically — cold start, not dead.
+    assert reg.matmul_plan(64, 64, 64, "interpret")
+
+
+def test_load_plans_missing_file_cold_starts(tmp_path):
+    reg = KernelRegistry()
+    with pytest.warns(UserWarning, match="cold start"):
+        assert reg.load_plans(tmp_path / "nope.json") == 0
+
+
+def test_load_plans_corrupt_entry_loads_nothing(tmp_path):
+    """A file that parses but has one corrupt entry loads ZERO plans —
+    no partially-applied cache."""
+    path = _good_plans(tmp_path)
+    obj = json.loads(path.read_text())
+    obj["plans"].append({"op": "x", "backend": "y", "shape": "bad",
+                         "blocks": [1]})
+    path.write_text(json.dumps(obj))
+    reg = KernelRegistry()
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert reg.load_plans(path) == 0
+    assert reg.cache_info()["plans"] == 0
+
+
+# -- the serving prefix index (--index) ------------------------------------
+
+
+@pytest.mark.parametrize("mutate", [
+    pytest.param(lambda d, txt: txt[: len(txt) // 2], id="truncated"),
+    pytest.param(lambda d, txt: "not json {{{", id="garbage"),
+    pytest.param(lambda d, txt: json.dumps({**d, "version": 99}),
+                 id="wrong-version"),
+    pytest.param(lambda d, txt: json.dumps({**d, "schema": "other"}),
+                 id="wrong-schema"),
+    pytest.param(
+        lambda d, txt: json.dumps(
+            {**d, "digests": {next(iter(d["digests"])): 9999}}),
+        id="digest-out-of-range"),
+    pytest.param(
+        lambda d, txt: json.dumps(
+            {**d, "digests": {"zz-not-hex": 0}}),
+        id="digest-not-hex"),
+    pytest.param(lambda d, txt: json.dumps({**d, "blocks": "bad"}),
+                 id="blocks-not-a-list"),
+    pytest.param(
+        lambda d, txt: json.dumps(
+            {**d, "blocks": [{"k": "AAAA", "v": "AAAA",
+                              "k_scale": None, "v_scale": None}]
+             * len(d["blocks"])}),
+        id="block-bytes-wrong-size"),
+])
+def test_load_index_corrupt_cold_starts(olmo, saved_index, tmp_path,
+                                        mutate):
+    """Every corruption mode warns, loads 0 digests, leaves the pool
+    invariant-clean, and the engine still serves (cold)."""
+    cfg, params = olmo
+    good_path, good_out = saved_index
+    data = json.loads(good_path.read_text())
+    bad = tmp_path / "bad.json"
+    bad.write_text(mutate(data, good_path.read_text()))
+
+    eng = _engine(cfg, params)
+    eng.generate(_requests(n=1))   # live scheduler → validated load path
+    with pytest.warns(UserWarning):
+        assert eng.load_index(bad) == 0
+    out = [r.out_tokens for r in eng.generate(_requests())]
+    assert out == good_out                  # cold serve, same tokens
+    assert_pool_invariants(eng._sched)
+    assert eng.pool_stats()["swap_ins"] == 0
+
+
+def test_load_index_missing_file_cold_starts(olmo, tmp_path):
+    cfg, params = olmo
+    eng = _engine(cfg, params)
+    with pytest.warns(UserWarning, match="cold start"):
+        assert eng.load_index(tmp_path / "nope.json") == 0
+    # Live-scheduler path too (post-first-generate load).
+    eng.generate(_requests(n=1))
+    with pytest.warns(UserWarning, match="cold start"):
+        assert eng._sched.load_index(tmp_path / "nope.json") == 0
+    assert_pool_invariants(eng._sched)
+
+
+def test_load_index_good_file_still_loads(olmo, saved_index):
+    """The robustness shell must not reject the happy path."""
+    cfg, params = olmo
+    good_path, good_out = saved_index
+    eng = _engine(cfg, params)
+    assert eng.load_index(good_path) > 0
+    out = [r.out_tokens for r in eng.generate(_requests())]
+    assert out == good_out
+    assert eng.pool_stats()["swap_ins"] > 0

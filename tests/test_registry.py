@@ -194,11 +194,14 @@ def test_save_and_load_plans_roundtrip(tmp_path):
 
 
 def test_load_plans_rejects_unknown_version(tmp_path):
+    """A wrong schema version warns and cold-starts (0 plans) — it must
+    never crash the process that passed --plans."""
     path = tmp_path / "bad.json"
     path.write_text('{"version": 99, "plans": []}')
     reg = KernelRegistry()
-    with pytest.raises(ValueError, match="version"):
-        reg.load_plans(path)
+    with pytest.warns(UserWarning, match="version"):
+        assert reg.load_plans(path) == 0
+    assert reg.cache_info()["plans"] == 0
 
 
 def test_custom_backend_registration():

@@ -262,6 +262,7 @@ def test_prefix_cache_after_speculative_retirement(olmo):
 
 # -- satellite: chunk-plan round-robin fairness ---------------------------
 
+@pytest.mark.slow
 def test_chunk_queue_round_robin(olmo):
     """Two admissions with in-flight chunk plans share the per-step chunk
     budget round-robin: both plans make progress while both are live,

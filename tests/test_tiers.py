@@ -124,6 +124,7 @@ def test_scheduler_tier_views_share_storage(olmo):
 
 
 @pytest.mark.parametrize("kv_int8", [False, True])
+@pytest.mark.slow
 def test_mixed_batch_bit_identical_to_solo(olmo, kv_int8):
     """Three requests at three tiers in one continuous batch: each token
     stream equals the solo engine pinned to that request's tier — bf16
@@ -165,6 +166,7 @@ def test_bit_identity_mid_decode_admission(olmo):
     assert mixed[2] == _solo(cfg, params, 2, PROMPT_B, 8, "w2a8")
 
 
+@pytest.mark.slow
 def test_prefix_cache_is_tier_scoped(olmo):
     """Same-tier followers reuse resident prompt blocks; a cross-tier
     follower of the same prompt must NOT (its K/V was computed at a
@@ -195,6 +197,7 @@ def test_prefix_cache_is_tier_scoped(olmo):
 # -- composition with speculation -----------------------------------------
 
 
+@pytest.mark.slow
 def test_speculation_composes_with_tiers(olmo):
     """w2 draft under a mixed batch: w8/w4 slots speculate, the w2 slot
     (nothing cheaper than itself) decodes normally — and every stream is

@@ -2,6 +2,8 @@
 compression path, fault-tolerant resume."""
 import dataclasses
 
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +34,7 @@ def test_loss_decreases():
     assert losses[-1] < losses[0] - 0.5, losses
 
 
+@pytest.mark.slow
 def test_microbatch_grads_match_full_batch():
     cfg, model, tc, data = _setup()
     batch = data.batch_at(0)
